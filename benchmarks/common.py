@@ -1,0 +1,47 @@
+"""Shared helpers for the benchmark harnesses (one per paper table)."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import jax
+
+from repro.common.types import OptimCfg, TrainCfg
+from repro.configs import PAPER
+
+ROWS: List[Dict] = []
+
+
+def record(name: str, us_per_call: float, derived: str):
+    ROWS.append({"name": name, "us": us_per_call, "derived": derived})
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def timed(fn: Callable, *args, repeats: int = 3):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return out, (time.perf_counter() - t0) / repeats * 1e6
+
+
+def bench_cfg(fast: bool):
+    """Benchmark PLM + budgets. fast=True keeps `python -m benchmarks.run`
+    under a few minutes; fast=False is the paper-scale overnight setting."""
+    arch = "bert-tiny" if fast else "bert-small"
+    steps = 250 if fast else 600
+    bs = 32
+    return {
+        "cfg": PAPER[arch](),
+        "steps": steps,
+        "batch": bs,
+        "seq": 32 if fast else 64,
+        "stage1": TrainCfg(optim=OptimCfg(lr=3e-3, total_steps=steps,
+                                          warmup_steps=steps // 10),
+                           steps=steps, batch_size=bs, log_every=0),
+        "stage2": TrainCfg(optim=OptimCfg(lr=8e-3, total_steps=steps,
+                                          warmup_steps=steps // 10),
+                           steps=steps, batch_size=bs, log_every=0),
+        "full_lr": 3e-4,
+    }

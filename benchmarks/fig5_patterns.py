@@ -1,0 +1,76 @@
+"""Paper Fig 5 (§5): tuning-pattern analysis across tasks - per-layer w/b
+distributions and cross-task cosine similarity. Claim validated: learned w
+vectors are nearly identical across tasks (cos ~ 1, they hover around the
+1.0 init) while b vectors are task-specific (low cross-task cos) -> the
+shared-weight adapter proposal.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+
+from repro.core import patterns, peft
+from repro.data.synthetic import TASKS, TaskData
+from repro.train.loop import two_stage_finetune
+from repro.train.pretrain import pretrain_encoder
+
+from benchmarks.common import bench_cfg, record
+
+FAST_TASKS = ["sst2", "cola", "qnli"]
+
+
+def run(fast: bool = True, out_json: str = "results/fig5_patterns.json"):
+    print("# Fig 5: cross-task adapter tuning patterns")
+    bc = bench_cfg(fast)
+    cfg, steps, bs, seq = bc["cfg"], bc["steps"], bc["batch"], bc["seq"]
+    tasks = FAST_TASKS if fast else sorted(TASKS)
+    pretrained = pretrain_encoder(cfg, steps=steps * 4, batch=bs, seq=seq)
+
+    t0 = time.perf_counter()
+    task_params = {}
+    cfg2 = None
+    for task in tasks:
+        tcfg = cfg.replace(n_classes=max(TASKS[task].n_classes, 2),
+                           is_regression=TASKS[task].n_classes == 1)
+        data = TaskData(task, cfg.vocab_size, seq_len=seq, n_train=2048,
+                        n_eval=256, seed=0)
+        res = two_stage_finetune(
+            jax.random.PRNGKey(0), tcfg, "hadamard", data,
+            stage1=bc["stage1"], stage2=bc["stage2"],
+            metric=TASKS[task].metric, pretrained_params=pretrained,
+            log=lambda s: None)
+        task_params[task] = res["params"]
+        cfg2 = res["cfg"]
+
+    sim = patterns.cross_task_similarity(task_params, cfg2)
+    rep = patterns.consistency_report(sim)
+    dists = {t: patterns.layer_distributions(p, cfg2)
+             for t, p in task_params.items()}
+    shared_w, per_task_b = patterns.suggest_shared_weight(task_params, cfg2)
+
+    dt = (time.perf_counter() - t0) * 1e6
+    record("fig5/cross_task_cosine", dt,
+           f"w_cos={rep['w_mean_cross_task_cos']:.4f};"
+           f"b_cos={rep['b_mean_cross_task_cos']:.4f}")
+
+    os.makedirs(os.path.dirname(out_json), exist_ok=True)
+    with open(out_json, "w") as f:
+        json.dump({
+            "report": rep,
+            "tasks": sorted(task_params),
+            "w_sim_mean_per_layer": sim["w"].mean(axis=(1, 2)).tolist(),
+            "b_sim_mean_per_layer": sim["b"].mean(axis=(1, 2)).tolist(),
+            "layer_stats": {t: {k: v.tolist() for k, v in d.items()}
+                            for t, d in dists.items()},
+        }, f, indent=1)
+    print(f"# w similar across tasks ({rep['w_mean_cross_task_cos']:.3f}) "
+          f"vs task-specific b ({rep['b_mean_cross_task_cos']:.3f}); "
+          f"details -> {out_json}")
+    return rep
+
+
+if __name__ == "__main__":
+    run()

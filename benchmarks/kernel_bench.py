@@ -1,0 +1,64 @@
+"""Kernel micro-benchmarks: wall time of the portable (jnp) implementations
+on CPU plus interpret-mode verification cost. On real TPU hardware the same
+harness times the compiled Pallas kernels (impl='pallas').
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+from benchmarks.common import record, timed
+
+KEY = jax.random.PRNGKey(0)
+
+
+def run(fast: bool = True):
+    print("# kernel micro-benchmarks (jnp portable path on CPU)")
+    B, S, d = (4, 256, 512) if fast else (8, 1024, 2048)
+
+    x = jax.random.normal(KEY, (B, S, d), jnp.float32)
+    w = jnp.ones((d,))
+    b = jnp.zeros((d,))
+    res = jax.random.normal(jax.random.fold_in(KEY, 1), (B, S, d))
+    scale = jnp.ones((d,))
+
+    f = jax.jit(lambda x, w, b: ops.hadamard(x, w, b, impl="jnp"))
+    _, us = timed(f, x, w, b)
+    record("kernel/hadamard_affine_jnp", us, f"shape={B}x{S}x{d}")
+
+    f = jax.jit(lambda x, r, w, b, s: ops.fused_adapter_norm(
+        x, r, w, b, s, impl="jnp"))
+    _, us = timed(f, x, res, w, b, scale)
+    record("kernel/fused_adapter_norm_jnp", us, f"shape={B}x{S}x{d}")
+
+    H, KH, D = 8, 2, 64
+    q = jax.random.normal(KEY, (2, H, S, D))
+    k = jax.random.normal(jax.random.fold_in(KEY, 2), (2, KH, S, D))
+    v = jax.random.normal(jax.random.fold_in(KEY, 3), (2, KH, S, D))
+    f = jax.jit(lambda q, k, v: ops.flash_attention(q, k, v, impl="jnp"))
+    _, us = timed(f, q, k, v)
+    record("kernel/attention_dense_jnp", us, f"S={S},H={H},GQA={H//KH}")
+
+    T, n = (128, 32) if fast else (512, 64)
+    r = jax.random.normal(KEY, (2, 4, T, n))
+    kk = jax.random.normal(jax.random.fold_in(KEY, 4), (2, 4, T, n))
+    vv = jax.random.normal(jax.random.fold_in(KEY, 5), (2, 4, T, n))
+    ww = jax.nn.sigmoid(jax.random.normal(jax.random.fold_in(KEY, 6),
+                                          (2, 4, T, n))) * 0.5 + 0.45
+    u = jax.random.normal(jax.random.fold_in(KEY, 7), (4, n)) * 0.1
+    _, us = timed(lambda: ops.wkv6(r, kk, vv, ww, u, impl="interpret",
+                                   chunk=64))
+    record("kernel/wkv6_interpret", us, f"T={T},n={n}")
+
+    wb = jax.random.normal(KEY, (8, d))
+    bb = jax.random.normal(jax.random.fold_in(KEY, 8), (8, d))
+    tids = jnp.arange(B) % 8
+    f = jax.jit(lambda x: ops.multitask_hadamard(x, wb, bb, tids, impl="jnp"))
+    _, us = timed(f, x)
+    record("kernel/multitask_hadamard_jnp", us, f"tasks=8,shape={B}x{S}x{d}")
+
+
+if __name__ == "__main__":
+    run()

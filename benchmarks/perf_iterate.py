@@ -1,0 +1,216 @@
+"""§Perf hillclimbing driver: re-lower chosen (arch x shape) cells with
+optimization levers toggled, and record hypothesis -> before -> after.
+
+The three pairs (chosen per the task spec from the baseline table):
+  * qwen3-0.6b x train_4k     - most collective-bound cell (measured
+                                ~227 GB/device of collectives; T_coll ~4.5s
+                                vs T_compute ~0.2s)
+  * deepseek-moe-16b x train_4k - worst HBM fit (29.3 GiB > 16 GiB) and the
+                                most representative of the paper's
+                                technique at scale (PEFT on a fine-grained
+                                MoE; EP + DP + SP interplay)
+  * internvl2-76b x train_4k  - memory-dominated dense giant
+                                (20.9 GiB > 16 GiB; fp32 logits CE)
+
+Run:  PYTHONPATH=src python -m benchmarks.perf_iterate --pair qwen3
+"""
+import argparse
+import json
+import os
+
+# must precede any jax import in the subprocess usage path
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+from repro.launch.dryrun import run_cell  # noqa: E402
+
+ITERATIONS = {
+    "qwen3": {
+        "arch": "qwen3-0.6b",
+        "shape": "train_4k",
+        "steps": [
+            ("baseline", {}, "paper-faithful config"),
+            ("replicate_kv", {"replicate_kv": True},
+             "H: K/V re-gathered per flash kv-chunk iteration under "
+             "sequence sharding (~8 GB/layer); materializing K/V once per "
+             "layer should cut T_coll ~10x for +134 MB/layer transient"),
+            ("replicate_kv+dots", {"replicate_kv": True,
+                                   "remat_policy": "dots"},
+             "H: with collectives fixed, compute term carries a full remat "
+             "recompute; saving matmul outputs removes the fwd recompute "
+             "(~-33% flops) for +activation memory"),
+            ("replicate_kv+ce_chunk", {"replicate_kv": True,
+                                       "ce_chunk": 512},
+             "H: fp32 logits (S x 151936 vocab) dominate residual HBM; "
+             "chunked CE removes the O(S*V) buffers"),
+            ("no_seq_shard+replicate_kv", {"replicate_kv": True,
+                                           "sequence_sharding": False},
+             "H: sequence sharding itself causes the resharding churn; "
+             "disabling it trades saved-activation memory for zero "
+             "boundary collectives"),
+            ("bf16_tiles", {"attn_tile_dtype": "bfloat16"},
+             "H (from HLO): collectives move FP32 K/V and cotangents "
+             "because flash tiles cast to fp32 before the gather; bf16 "
+             "MXU tiles with fp32 accumulation halve every attention "
+             "collective and byte"),
+            ("bf16_tiles+rkv+ce", {"attn_tile_dtype": "bfloat16",
+                                   "replicate_kv": True, "ce_chunk": 512},
+             "H: compose the three wins"),
+            ("best", {"attn_tile_dtype": "bfloat16", "replicate_kv": True,
+                      "ce_chunk": 512, "sequence_sharding": False},
+             "H: at 0.6B, SP's memory saving is unneeded (12 GiB fits); "
+             "dropping SP removes the replicated compute after its "
+             "all-gathers (-35% flops measured) - compose with bf16 tiles "
+             "and chunked CE for the final config"),
+        ],
+    },
+    "deepseek": {
+        "arch": "deepseek-moe-16b",
+        "shape": "train_4k",
+        "steps": [
+            ("baseline", {}, "paper-faithful config"),
+            ("ce_chunk", {"ce_chunk": 512},
+             "H: vocab 102400 fp32 logits+softmax ~5 GB/device; chunked CE "
+             "should cut peak HBM by ~4-5 GB"),
+            ("ce_chunk+replicate_kv", {"ce_chunk": 512, "replicate_kv": True},
+             "H: MHA kv=16 is fully head-sharded, but the flash chunk scan "
+             "still re-gathers under seq sharding -> same collective fix"),
+            ("ce+rkv+bf16_tiles", {"ce_chunk": 512, "replicate_kv": True,
+                                   "attn_tile_dtype": "bfloat16"},
+             "H: bf16 attention tiles halve attention collectives/bytes"),
+            ("ce_chunk+rkv+cap1.0", {"ce_chunk": 512, "replicate_kv": True,
+                                     "attn_tile_dtype": "bfloat16",
+                                     "_moe_cap": 1.0},
+             "H: dispatch buffers scale with capacity_factor; 1.25 -> 1.0 "
+             "cuts the (G,E,cap,d) buffers and their all-to-all by 20%"),
+            ("microbatch4", {"_microbatch": 4, "replicate_kv": True,
+                             "attn_tile_dtype": "bfloat16", "_moe_cap": 1.0},
+             "H: ce_chunk refuted logits again - the peak is the MoE "
+             "dispatch/backward working set, linear in per-device tokens; "
+             "4-way grad accumulation divides it ~4x (65k -> 16k tokens "
+             "per group per microbatch)"),
+        ],
+    },
+    "internvl": {
+        "arch": "internvl2-76b",
+        "shape": "train_4k",
+        "steps": [
+            ("baseline", {}, "paper-faithful config"),
+            ("ce_chunk", {"ce_chunk": 512},
+             "H: (16,4096,8016) fp32 logits fwd+bwd+softmax ~6 GB/device; "
+             "chunking removes them"),
+            ("ce_chunk+replicate_kv", {"ce_chunk": 512, "replicate_kv": True},
+             "H: kv=8 heads don't divide the model axis -> padded shards "
+             "churn; replicating K/V (134 MB/layer) kills per-chunk "
+             "gathers"),
+            ("ce_chunk+rkv+dots", {"ce_chunk": 512, "replicate_kv": True,
+                                   "remat_policy": "dots"},
+             "H: if memory fits after CE fix, spend it on saved matmuls "
+             "to drop the recompute flops"),
+            ("ce+rkv+bf16_tiles", {"ce_chunk": 512, "replicate_kv": True,
+                                   "attn_tile_dtype": "bfloat16"},
+             "H: bf16 attention tiles halve attention collectives/bytes "
+             "(see qwen3 HLO breakdown)"),
+            ("microbatch4", {"_microbatch": 4, "attn_tile_dtype": "bfloat16",
+                             "ce_chunk": 512},
+             "H: ce_chunk refuted the logits theory - the peak is the "
+             "backward working set, which scales with per-device batch; "
+             "4-way gradient accumulation divides it ~4x at equal math"),
+            ("no_fsdp+microbatch8", {"_microbatch": 8, "ce_chunk": 512,
+                                     "attn_tile_dtype": "bfloat16",
+                                     "shard_profile": "tp"},
+             "H: mb4 fits but FSDP weight gathers x4 microbatches cost "
+             "+50% collectives; TP-only weights are 9.5 GiB/chip - paying "
+             "that residency + mb8 transients (~13 GiB total) should kill "
+             "most weight traffic"),
+        ],
+    },
+    "qwen3moe": {
+        "arch": "qwen3-moe-235b-a22b",
+        "shape": "train_4k",
+        "steps": [
+            ("mb8+rkv+bf16+cap1.0", {"_microbatch": 8, "replicate_kv": True,
+                                     "attn_tile_dtype": "bfloat16",
+                                     "_moe_cap": 1.0},
+             "H: worst cell of the matrix (65.2 GiB/device baseline): "
+             "94-layer MoE backward working set + FSDP gathers; compose "
+             "every confirmed lever with 8-way accumulation"),
+        ],
+    },
+    # bonus pair: windowed-band slicing (framework-level opt, always-on in
+    # the new code; the matrix baseline predates it)
+    "gemma2_window": {
+        "arch": "gemma2-27b",
+        "shape": "prefill_32k",
+        "steps": [
+            ("window_band", {},
+             "H: local-window layers compute all nq x nk flash tiles and "
+             "mask; slicing the (window + q_chunk) kv band per q chunk cuts "
+             "local-attention tiles 4x at 32k (window 4096) -> ~-30% total "
+             "prefill flops on gemma2 (23/46 layers local)"),
+        ],
+    },
+    "rgemma_window": {
+        "arch": "recurrentgemma-2b",
+        "shape": "prefill_32k",
+        "steps": [
+            ("window_band", {},
+             "H: window 2048 at 32k -> 16x fewer tiles on the attention "
+             "third of the stack"),
+        ],
+    },
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", required=True, choices=sorted(ITERATIONS))
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--out", default="results/perf_iterations.json")
+    ap.add_argument("--only", default=None, help="run a single named step")
+    args = ap.parse_args()
+
+    plan = ITERATIONS[args.pair]
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    records = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            records = json.load(f)
+    done = {(r["pair"], r["step"]) for r in records}
+
+    for name, overrides, hypothesis in plan["steps"]:
+        if args.only and name != args.only:
+            continue
+        if (args.pair, name) in done:
+            print(f"[skip-cached] {args.pair}/{name}")
+            continue
+        print(f"[perf] {args.pair}/{name}: {hypothesis[:80]}", flush=True)
+        ov = dict(overrides)
+        mb = ov.pop("_microbatch", 0)
+        cap = ov.pop("_moe_cap", None)
+        if cap is not None:
+            import dataclasses
+
+            from repro.configs import get as get_cfg
+
+            moe = dataclasses.replace(get_cfg(plan["arch"]).moe,
+                                      capacity_factor=cap)
+            ov["moe"] = moe
+        rec = run_cell(plan["arch"], plan["shape"], args.mesh,
+                       cfg_overrides=ov, microbatch=mb)
+        rec.update(pair=args.pair, step=name, hypothesis=hypothesis)
+        rec.pop("overrides", None)
+        records.append(rec)
+        if rec["status"] == "ok":
+            c = rec["costs"]
+            print(f"  -> mem={rec['memory']['peak_estimate_bytes']/2**30:.2f}GiB "
+                  f"flops={c['flops']/1e12:.1f}T bytes={c['bytes']/2**30:.0f}GiB "
+                  f"coll={c['coll']/2**30:.2f}GiB", flush=True)
+        else:
+            print(f"  -> {rec['status']}: {rec.get('error','')[:200]}")
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

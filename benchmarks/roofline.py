@@ -1,0 +1,142 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads results/dryrun.json and derives, per (arch x shape x mesh):
+    T_compute    = flops_per_device / peak_flops
+    T_memory     = bytes_per_device / hbm_bw        (upper bound: see note)
+    T_collective = coll_bytes_per_device / ici_bw
+plus the dominant term, MODEL_FLOPS / HLO_FLOPs (useful-compute ratio) and
+HBM fit. All inputs are per-device (XLA reports the SPMD module).
+
+NOTE on the memory term: 'bytes accessed' from HloCostAnalysis counts every
+op's operands+outputs without TPU fusion awareness, so it is an upper bound
+on real HBM traffic; we also report a fusion-aware lower bound
+(params + saved activations + logits, from memory_analysis components).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List, Optional
+
+from repro.common.types import V5E
+
+GiB = 2**30
+
+
+def derive(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return None
+    c = rec.get("costs") or {}
+    flops = c.get("flops", 0.0)
+    byts = c.get("bytes", 0.0)
+    coll = c.get("coll", 0.0)
+    n_dev = rec["n_devices"]
+
+    t_compute = flops / V5E.peak_flops_bf16
+    t_memory = byts / V5E.hbm_bandwidth
+    t_coll = coll / V5E.ici_bandwidth
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+
+    mf = rec.get("model_flops", 0.0)
+    mf_peft = rec.get("model_flops_peft", mf)
+    flops_global = flops * n_dev
+    useful = mf / flops_global if flops_global else 0.0
+    useful_peft = mf_peft / flops_global if flops_global else 0.0
+
+    # roofline fraction: useful model flops per chip-second at the
+    # bottleneck-implied step time
+    step_time = max(terms.values())
+    mfu = (mf / n_dev / step_time) / V5E.peak_flops_bf16 if step_time else 0.0
+
+    mem = rec["memory"]
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "peft": rec["peft"], "kind": rec.get("step_kind"),
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops": mf, "hlo_flops_global": flops_global,
+        "useful_ratio": useful, "useful_ratio_peft": useful_peft,
+        "roofline_fraction": mfu,
+        "hbm_gib": mem["peak_estimate_bytes"] / GiB,
+        "fits_hbm": mem["peak_estimate_bytes"] <= V5E.hbm_bytes,
+        "compile_s": rec.get("compile_s"),
+        "cost_method": c.get("method"),
+    }
+
+
+def load(path: str) -> List[Dict]:
+    with open(path) as f:
+        return json.load(f)
+
+
+def table(records: List[Dict], mesh: str = "single") -> List[Dict]:
+    rows = []
+    for rec in records:
+        if rec.get("mesh") != mesh:
+            continue
+        if rec.get("status") == "skipped":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": mesh, "skipped": rec["reason"]})
+            continue
+        d = derive(rec)
+        if d:
+            rows.append(d)
+    return sorted(rows, key=lambda r: (r["arch"], r["shape"]))
+
+
+def render_markdown(rows: List[Dict]) -> str:
+    out = ["| arch | shape | T_comp (s) | T_mem (s) | T_coll (s) | dominant "
+           "| useful (peft) | roofline frac | HBM GiB | fits |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if "skipped" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | - | - | - | skipped |"
+                       f" - | - | - | - |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3f} | "
+            f"{r['t_memory_s']:.3f} | {r['t_collective_s']:.3f} | "
+            f"{r['dominant']} | {r['useful_ratio']:.2f} "
+            f"({r['useful_ratio_peft']:.2f}) | {r['roofline_fraction']:.3f} | "
+            f"{r['hbm_gib']:.1f} | {'y' if r['fits_hbm'] else 'NO'} |")
+    return "\n".join(out)
+
+
+def run(fast: bool = True, path: str = "results/dryrun.json"):
+    try:
+        records = load(path)
+    except FileNotFoundError:
+        print(f"# roofline: {path} not found (run launch.dryrun first)")
+        return []
+    from benchmarks.common import record as rec_row
+
+    rows = table(records, "single")
+    for r in rows:
+        if "skipped" in r:
+            rec_row(f"roofline/{r['arch']}/{r['shape']}", 0.0, "skipped")
+            continue
+        rec_row(
+            f"roofline/{r['arch']}/{r['shape']}", 0.0,
+            f"dom={r['dominant']};frac={r['roofline_fraction']:.3f};"
+            f"tc={r['t_compute_s']:.3f};tm={r['t_memory_s']:.3f};"
+            f"tx={r['t_collective_s']:.3f};hbm={r['hbm_gib']:.1f}GiB")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="results/dryrun.json")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    rows = table(load(args.json), args.mesh)
+    if args.markdown:
+        print(render_markdown(rows))
+    else:
+        for r in rows:
+            print(json.dumps(r))
+
+
+if __name__ == "__main__":
+    main()

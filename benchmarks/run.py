@@ -1,0 +1,59 @@
+"""Benchmark entrypoint: one harness per paper table/figure + kernels +
+roofline. Prints ``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run            # fast (minutes, CPU)
+  PYTHONPATH=src python -m benchmarks.run --full     # paper-scale budgets
+  PYTHONPATH=src python -m benchmarks.run --only table3,roofline
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale budgets (slow)")
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset of: table2,table3,table4,"
+                         "table5,fig5,kernels,roofline")
+    args = ap.parse_args()
+    fast = not args.full
+    only = set(filter(None, args.only.split(",")))
+
+    from benchmarks import (fig5_patterns, kernel_bench, roofline,
+                            table2_two_stage, table3_param_counts,
+                            table4_module_ablation, table5_layer_sweep)
+
+    suites = [
+        ("table3", table3_param_counts.run),   # fast + exact: run first
+        ("kernels", kernel_bench.run),
+        ("roofline", roofline.run),
+        ("table2", table2_two_stage.run),
+        ("table4", table4_module_ablation.run),
+        ("table5", table5_layer_sweep.run),
+        ("fig5", fig5_patterns.run),
+    ]
+
+    failures = []
+    t0 = time.time()
+    for name, fn in suites:
+        if only and name not in only:
+            continue
+        print(f"\n=== {name} ===", flush=True)
+        try:
+            fn(fast=fast)
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+    print(f"\n# benchmarks done in {time.time() - t0:.0f}s; "
+          f"failures: {failures or 'none'}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

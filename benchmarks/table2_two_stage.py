@@ -1,0 +1,80 @@
+"""Paper Table 2: classifier-only vs Hadamard-adapter tuning vs full
+fine-tuning across the GLUE-style synthetic suite.
+
+Claim validated (relative form, per DESIGN.md §10): two-stage Hadamard
+tuning recovers most of the (full-FT - classifier-only) quality gap with
+~0.03-0.1 % trainable params. Backbones are MLM-pretrained synthetically
+(cached), standing in for the paper's pretrained PLMs.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.common.types import OptimCfg
+from repro.core import peft
+from repro.data.synthetic import TASKS, TaskData
+from repro.train.loop import evaluate, run_train, two_stage_finetune
+from repro.train.pretrain import pretrain_encoder
+from repro.train.steps import build_train_step, make_state, merged_params
+
+from benchmarks.common import bench_cfg, record
+
+FAST_TASKS = ["sst2", "cola", "mrpc", "stsb"]
+FULL_TASKS = sorted(TASKS)
+
+
+def run(fast: bool = True):
+    print("# Table 2: classifier vs Hadamard adapter vs full fine-tuning")
+    bc = bench_cfg(fast)
+    cfg, steps, bs, seq = bc["cfg"], bc["steps"], bc["batch"], bc["seq"]
+    tasks = FAST_TASKS if fast else FULL_TASKS
+    pretrained = pretrain_encoder(cfg, steps=steps * 4, batch=bs, seq=seq)
+
+    rows = {}
+    for task in tasks:
+        metric = TASKS[task].metric
+        tcfg = cfg.replace(n_classes=max(TASKS[task].n_classes, 2),
+                           is_regression=TASKS[task].n_classes == 1)
+        data = TaskData(task, cfg.vocab_size, seq_len=seq,
+                        n_train=2048, n_eval=256, seed=0)
+        t0 = time.perf_counter()
+
+        # two-stage hadamard (includes the classifier-only stage-1 score)
+        res = two_stage_finetune(
+            jax.random.PRNGKey(0), tcfg, "hadamard", data,
+            stage1=bc["stage1"], stage2=bc["stage2"], metric=metric,
+            pretrained_params=pretrained, log=lambda s: None)
+
+        # full fine-tuning baseline (same budget)
+        strat = peft.strategy("full")
+        ocfg = OptimCfg(lr=bc["full_lr"], total_steps=steps,
+                        warmup_steps=steps // 10)
+        state = make_state(jax.random.PRNGKey(0), tcfg, strat, ocfg,
+                           params=pretrained)
+        step = build_train_step(tcfg, ocfg)
+        state, _ = run_train(state, step,
+                             data.train_batches(steps, bs, seed=3),
+                             steps=steps, log_every=0)
+        full_m = evaluate(tcfg, merged_params(state),
+                          data.eval_batches(bs), metric)
+        dt = time.perf_counter() - t0
+
+        cls_m, had_m = res["stage1_metric"], res["final_metric"]
+        gap = full_m - cls_m
+        recovered = (had_m - cls_m) / gap if abs(gap) > 1e-6 else 1.0
+        rows[task] = (cls_m, had_m, full_m, recovered)
+        record(f"table2/{task}", dt * 1e6 / steps,
+               f"{metric}:cls={cls_m:.3f};hadamard={had_m:.3f};"
+               f"full={full_m:.3f};gap_recovered={recovered:.2f};"
+               f"pct={res['param_stats']['percent']:.4f}")
+
+    mean_rec = sum(r[3] for r in rows.values()) / len(rows)
+    print(f"# mean gap recovered by Hadamard adapter: {mean_rec:.2f} "
+          f"(paper: adapter ~= 99.4% of full FT from a 77.5% classifier base)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

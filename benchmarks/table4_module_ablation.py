@@ -1,0 +1,71 @@
+"""Paper Table 4: which modules to unfreeze - adapter Weight (W), adapter
+Bias (B), FFN-output norm (N), attention-output norm (A), and combinations.
+Claim validated: B and N matter more than W and A; the paper's final
+recipe (W+B+N) is at or near the top.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.common.types import OptimCfg, TrainCfg
+from repro.core import peft
+from repro.data.synthetic import TaskData
+from repro.train.loop import evaluate, overlay_by_path, run_train
+from repro.train.pretrain import pretrain_encoder
+from repro.train.steps import build_train_step, make_state, merged_params
+from repro.models import model as M
+
+from benchmarks.common import bench_cfg, record
+
+COMBOS = ["W", "B", "N", "A", "W+A", "W+N", "B+A", "B+N", "W+B",
+          "W+B+N+A", "W+B+A", "W+B+N"]  # last = the paper's recipe
+
+
+def run(fast: bool = True, task: str = "sst2"):
+    print("# Table 4: module ablation (W=adapter weight, B=adapter bias, "
+          "N=ffn norm, A=attn norm)")
+    bc = bench_cfg(fast)
+    cfg, steps, bs, seq = bc["cfg"], bc["steps"], bc["batch"], bc["seq"]
+    pretrained = pretrain_encoder(cfg, steps=steps * 4, batch=bs, seq=seq)
+    data = TaskData(task, cfg.vocab_size, seq_len=seq, n_train=2048,
+                    n_eval=256, seed=0)
+
+    # shared stage 1 (classifier training) - reused across all combos,
+    # exactly like the paper reloads one trained classifier
+    strat1 = peft.strategy("classifier_only")
+    ocfg1 = bc["stage1"].optim
+    st1 = make_state(jax.random.PRNGKey(0), cfg, strat1, ocfg1,
+                     params=pretrained)
+    step1 = build_train_step(cfg, ocfg1)
+    st1, _ = run_train(st1, step1, data.train_batches(steps, bs, seed=1),
+                       steps=steps, log_every=0)
+    stage1_params = merged_params(st1)
+
+    results = {}
+    for combo in COMBOS:
+        t0 = time.perf_counter()
+        strat = peft.ablation_strategy(combo)
+        cfg2 = peft.attach(cfg, strat)
+        params2 = overlay_by_path(
+            M.init_params(jax.random.PRNGKey(1), cfg2), stage1_params)
+        ocfg2 = bc["stage2"].optim
+        st2 = make_state(jax.random.PRNGKey(1), cfg2, strat, ocfg2,
+                         params=params2)
+        step2 = build_train_step(cfg2, ocfg2)
+        st2, _ = run_train(st2, step2, data.train_batches(steps, bs, seed=2),
+                           steps=steps, log_every=0)
+        m = evaluate(cfg2, merged_params(st2), data.eval_batches(bs), "acc")
+        results[combo] = m
+        record(f"table4/{combo}", (time.perf_counter() - t0) * 1e6 / steps,
+               f"acc={m:.4f}")
+
+    best = max(results, key=results.get)
+    print(f"# best combo: {best} ({results[best]:.4f}); paper recipe W+B+N: "
+          f"{results['W+B+N']:.4f}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""Quickstart: the paper's two-stage Hadamard-adapter recipe in ~40 lines.
+
+  PYTHONPATH=src python examples/quickstart.py
+
+Stage 1 trains only the classifier head on a frozen (synthetically
+pretrained) encoder; stage 2 injects the per-layer (w, b) Hadamard adapter
+after each attention output, reloads the head, and tunes only
+adapter + FFN-output LayerNorm - ~0.1 % of params on this tiny model,
+0.033 % at BERT-base scale (run `python -m benchmarks.run --only table3`).
+"""
+import jax
+
+from repro.common.types import OptimCfg, TrainCfg
+from repro.configs import PAPER
+from repro.data.synthetic import TaskData
+from repro.train.loop import two_stage_finetune
+from repro.train.pretrain import pretrain_encoder
+
+
+def main():
+    cfg = PAPER["bert-tiny"]()
+    print(f"backbone: {cfg.name} ({cfg.n_layers}L, d={cfg.d_model})")
+
+    # stand-in for a pretrained PLM (cached across runs)
+    params = pretrain_encoder(cfg, steps=800, batch=32, seq=32)
+
+    data = TaskData("sst2", cfg.vocab_size, seq_len=32, n_train=2048,
+                    n_eval=256, seed=0)
+    stage = lambda lr, steps: TrainCfg(
+        optim=OptimCfg(lr=lr, total_steps=steps, warmup_steps=steps // 10),
+        steps=steps, batch_size=32, log_every=50)
+
+    res = two_stage_finetune(
+        jax.random.PRNGKey(0), cfg, "hadamard", data,
+        stage1=stage(3e-3, 200),   # paper: classifier lr 2e-3..4e-3
+        stage2=stage(8e-3, 200),   # paper: adapter lr 1e-3..9e-3
+        metric="acc",
+        pretrained_params=params)
+
+    s = res["param_stats"]
+    print(f"\nclassifier-only acc: {res['stage1_metric']:.3f}")
+    print(f"hadamard-adapter acc: {res['final_metric']:.3f}")
+    print(f"trainable params: {s['trainable']} / {s['total']} "
+          f"({s['percent']:.4f} %)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.store import load_tree, save_tree
+
+import jax.numpy as jnp
+
+from repro.common import tree as tu
+
+
+def restore_into(skeleton, restored_tree):
+    """Overlay a loaded checkpoint onto a state skeleton by path.
+
+    The skeleton (from make_state) contains None leaves at frozen/trainable
+    partitions; checkpoints only store concrete arrays, so a plain tree_map
+    has mismatched structure. Leaves are matched by their path string and
+    cast to the skeleton's dtype (host arrays -> any mesh: elastic restore).
+    """
+    flat = dict(tu.flatten_with_paths(restored_tree))
+
+    def pick(path, v):
+        arr = flat.get(path)
+        if arr is None:
+            return v
+        return jnp.asarray(arr, v.dtype)
+
+    return tu.map_with_path(pick, skeleton)

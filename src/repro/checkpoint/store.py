@@ -1,0 +1,85 @@
+"""Checkpoint serialization: nested dict of arrays <-> one msgpack file.
+
+Self-contained (no orbax offline): dtype-faithful (bfloat16 via ml_dtypes
+raw bytes), atomic (tmp + os.replace), with optional zstd compression.
+Restore returns host numpy arrays, so a checkpoint written under one mesh
+can be re-placed under any other - this is the elasticity primitive.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, Optional
+
+import msgpack
+import numpy as np
+import zstandard
+
+import jax
+import ml_dtypes  # ships with jax
+
+_DTYPES = {
+    "bfloat16": ml_dtypes.bfloat16,
+    "float8_e4m3fn": ml_dtypes.float8_e4m3fn,
+}
+
+
+def _np_dtype(name: str):
+    return _DTYPES.get(name, np.dtype(name))
+
+
+def _flatten(tree, prefix="") -> Dict[str, np.ndarray]:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif tree is None:
+        pass
+    else:
+        out[prefix[:-1]] = np.asarray(tree)
+    return out
+
+
+def _unflatten(flat: Dict[str, np.ndarray]):
+    root: dict = {}
+    for path, v in flat.items():
+        node = root
+        parts = path.split("/")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = v
+    return root
+
+
+def save_tree(path: str, tree, *, compress: bool = True,
+              metadata: Optional[dict] = None):
+    flat = _flatten(jax.device_get(tree))
+    payload = {
+        "meta": metadata or {},
+        "arrays": {
+            k: {"dtype": str(v.dtype), "shape": list(v.shape),
+                "data": v.tobytes()}
+            for k, v in flat.items()
+        },
+    }
+    raw = msgpack.packb(payload, use_bin_type=True)
+    if compress:
+        raw = b"ZSTD" + zstandard.ZstdCompressor(level=3).compress(raw)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(raw)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)  # atomic publish
+
+
+def load_tree(path: str):
+    with open(path, "rb") as f:
+        raw = f.read()
+    if raw[:4] == b"ZSTD":
+        raw = zstandard.ZstdDecompressor().decompress(raw[4:])
+    payload = msgpack.unpackb(raw, raw=False)
+    flat = {}
+    for k, spec in payload["arrays"].items():
+        arr = np.frombuffer(spec["data"], dtype=_np_dtype(spec["dtype"]))
+        flat[k] = arr.reshape(spec["shape"])
+    return _unflatten(flat), payload["meta"]

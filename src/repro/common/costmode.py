@@ -1,0 +1,40 @@
+"""Cost-measurement mode.
+
+`compiled.cost_analysis()` counts a `lax.scan` (while-loop) body ONCE,
+regardless of trip count (verified empirically on the CPU backend).  The
+dry-run therefore lowers two kinds of artifacts:
+
+  * the production program (scans everywhere) -> memory_analysis, proves
+    compilability;
+  * small "proxy" programs with every scan unrolled -> exact per-device
+    FLOPs / bytes / collective counts, linearly extrapolated over layer
+    counts (cost is affine in scan trip count by construction).
+
+When `cost_mode()` is true, every scan in the model body is created with
+`unroll=<trip count>` so the while loop disappears from the HLO.
+"""
+from __future__ import annotations
+
+import contextlib
+
+_COST_MODE = False
+
+
+def cost_mode() -> bool:
+    return _COST_MODE
+
+
+@contextlib.contextmanager
+def cost_mode_ctx(enabled: bool = True):
+    global _COST_MODE
+    prev = _COST_MODE
+    _COST_MODE = enabled
+    try:
+        yield
+    finally:
+        _COST_MODE = prev
+
+
+def scan_unroll(n_iters: int) -> int:
+    """Unroll amount to pass to lax.scan given the current mode."""
+    return n_iters if _COST_MODE else 1

@@ -1,0 +1,142 @@
+"""Pytree utilities: path-based masks, partition/merge, counting.
+
+The PEFT machinery is built on these: a *mask* is a pytree of booleans with
+the same structure as the params; `partition` splits params into
+(trainable, frozen) trees with `None` placeholders so gradients and
+optimizer state exist only for trainable leaves.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Callable, Dict, Iterable, Iterator, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def path_str(path) -> str:
+    """Render a jax key path as 'a/b/0/c'."""
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def flatten_with_paths(tree) -> List[Tuple[str, Any]]:
+    leaves = jax.tree_util.tree_leaves_with_path(tree)
+    return [(path_str(p), v) for p, v in leaves]
+
+
+def map_with_path(fn: Callable[[str, Any], Any], tree):
+    return jax.tree_util.tree_map_with_path(lambda p, v: fn(path_str(p), v), tree)
+
+
+def mask_from_patterns(tree, patterns: Iterable[str]):
+    """Boolean mask: leaf is True if its path matches any regex in patterns."""
+    regexes = [re.compile(p) for p in patterns]
+
+    def match(path: str, _v) -> bool:
+        return any(r.search(path) for r in regexes)
+
+    return map_with_path(match, tree)
+
+
+def partition(tree, mask):
+    """Split into (selected, rest); unselected leaves become None."""
+    sel = jax.tree.map(lambda v, m: v if m else None, tree, mask)
+    rest = jax.tree.map(lambda v, m: None if m else v, tree, mask)
+    return sel, rest
+
+
+def merge(a, b):
+    """Inverse of partition: take the non-None leaf from either tree."""
+
+    def pick(x, y):
+        if x is None:
+            return y
+        if y is None:
+            return x
+        raise ValueError("merge: both leaves are non-None")
+
+    return jax.tree.map(pick, a, b, is_leaf=lambda v: v is None)
+
+
+def prune_none(tree):
+    """Drop None leaves entirely (for optimizer state over trainable-only)."""
+    return jax.tree.map(lambda v: v, tree, is_leaf=lambda v: v is None)
+
+
+def count_params(tree) -> int:
+    return sum(
+        int(np.prod(l.shape))
+        for l in jax.tree.leaves(tree)
+        if l is not None and hasattr(l, "shape")
+    )
+
+
+def count_masked(tree, mask) -> int:
+    total = 0
+    for leaf, m in zip(jax.tree.leaves(tree), jax.tree.leaves(mask)):
+        if m and leaf is not None and hasattr(leaf, "shape"):
+            total += int(np.prod(leaf.shape))
+    return total
+
+
+def tree_bytes(tree) -> int:
+    total = 0
+    for l in jax.tree.leaves(tree):
+        if l is not None and hasattr(l, "shape"):
+            total += int(np.prod(l.shape)) * jnp.dtype(l.dtype).itemsize
+    return total
+
+
+def named_leaves(tree) -> Dict[str, Any]:
+    return dict(flatten_with_paths(tree))
+
+
+def zeros_like_tree(tree, dtype=None):
+    return jax.tree.map(
+        lambda v: None if v is None else jnp.zeros(v.shape, dtype or v.dtype),
+        tree,
+        is_leaf=lambda v: v is None,
+    )
+
+
+def cast_tree(tree, dtype):
+    def cast(v):
+        if v is None:
+            return None
+        if jnp.issubdtype(v.dtype, jnp.floating):
+            return v.astype(dtype)
+        return v
+
+    return jax.tree.map(cast, tree, is_leaf=lambda v: v is None)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [l for l in jax.tree.leaves(tree) if l is not None]
+    if not leaves:
+        return jnp.zeros((), jnp.float32)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def tree_add(a, b):
+    return jax.tree.map(
+        lambda x, y: None if x is None else x + y, a, b, is_leaf=lambda v: v is None
+    )
+
+
+def tree_scale(tree, s):
+    return jax.tree.map(
+        lambda x: None if x is None else x * s, tree, is_leaf=lambda v: v is None
+    )

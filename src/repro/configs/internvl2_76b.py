@@ -1,0 +1,32 @@
+"""internvl2-76b [arXiv:2404.16821]: InternLM2/Llama3-70B-class backbone,
+80L d=8192 64H (GQA kv=8, head_dim=128) d_ff=28672 vocab=128256.
+InternViT frontend stubbed: input_specs provides precomputed patch
+embeddings (n_image_tokens=256) prepended to the token sequence."""
+from repro.common.types import ModelCfg
+from repro.configs.util import dense_decoder, smoke_dims
+
+
+def config() -> ModelCfg:
+    return ModelCfg(
+        name="internvl2-76b",
+        family="vlm",
+        d_model=8192,
+        n_heads=64,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=28672,
+        vocab_size=128256,
+        groups=dense_decoder(80),
+        n_image_tokens=256,
+        norm="rmsnorm",
+        act="silu",
+        gated_mlp=True,
+        pos="rope",
+        rope_theta=5e5,
+        max_seq_len=32768,
+        shard_profile="tp_fsdp",
+    )
+
+
+def smoke() -> ModelCfg:
+    return smoke_dims(config(), groups=dense_decoder(2))

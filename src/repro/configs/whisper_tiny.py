@@ -1,0 +1,42 @@
+"""whisper-tiny [arXiv:2212.04356]: enc-dec, 4L+4L d=384 6H d_ff=1536
+vocab=51865; conv frontend stubbed (input_specs provides precomputed frame
+embeddings per the task spec). Decoder position table scaled to the
+assigned 32k decode shapes (the backbone, not OpenAI's 448-token table)."""
+from repro.common.types import Group, ModelCfg, Slot
+from repro.configs.util import smoke_dims
+
+
+def config() -> ModelCfg:
+    return ModelCfg(
+        name="whisper-tiny",
+        family="encdec",
+        d_model=384,
+        n_heads=6,
+        n_kv_heads=6,
+        head_dim=64,
+        d_ff=1536,
+        vocab_size=51865,
+        groups=(Group((Slot("attn", cross_attn=True),), 4),),
+        enc_groups=(Group((Slot("attn"),), 4),),
+        n_audio_frames=1500,
+        norm="layernorm",
+        ln_placement="pre",
+        act="gelu",
+        gated_mlp=False,
+        attn_bias=True,
+        mlp_bias=True,
+        pos="learned",
+        tie_embeddings=True,
+        max_seq_len=32768,
+        shard_profile="tp",
+    )
+
+
+def smoke() -> ModelCfg:
+    cfg = config()
+    return smoke_dims(
+        cfg,
+        n_kv_heads=4,
+        groups=(Group((Slot("attn", cross_attn=True),), 2),),
+        enc_groups=(Group((Slot("attn"),), 2),),
+    )

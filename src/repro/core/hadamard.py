@@ -1,0 +1,154 @@
+"""Hadamard-adapter specific operations: extraction, folding, task banks.
+
+The adapter itself lives inside block params (see models/program.py); this
+module provides the operations a deployment needs around it:
+
+  * extract / load adapter-only deltas (KB-sized task checkpoints),
+  * zero-overhead serving: fold the learned affine into W_O,
+  * multi-task banks: stack many tasks' adapters for batched serving.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common import tree as tu
+from repro.common.types import ModelCfg
+
+ADAPTER_RE = re.compile(r"/adapter/")
+DELTA_PATTERNS = (r"/adapter/", r"/ffn_norm/", r"^pooler/", r"^classifier/")
+
+
+def extract_delta(params):
+    """The task-specific leaves (adapter + tuned norms + head): KB-sized."""
+    mask = tu.mask_from_patterns(params, DELTA_PATTERNS)
+    delta, _ = tu.partition(params, mask)
+    return delta
+
+
+def apply_delta(params, delta):
+    """Overlay a task delta onto (shared, frozen) backbone params."""
+
+    def pick(d, p):
+        return p if d is None else d
+
+    return jax.tree.map(pick, delta, params, is_leaf=lambda v: v is None)
+
+
+# ---------------------------------------------------------------------------
+# Folding (serving optimization, beyond-paper)
+# ---------------------------------------------------------------------------
+
+
+def fold_adapter(params, cfg: ModelCfg):
+    """Fold the Hadamard adapter into the attention out-projection so that
+    serving pays zero extra FLOPs/bytes for it.
+
+      attn_concat:  (c . w + b) @ Wo = c @ (w[:,None]*Wo) + b@Wo
+                    -> fully folded (bias lands in/creates bo)
+      attn_out:     (c @ Wo + bo) . w + b = c @ (Wo*w[None,:]) + (bo*w + b)
+                    -> fully folded likewise
+
+    Returns new params with adapters reset to identity.
+    """
+    pos = cfg.adapter.position
+
+    def fold_block(block):
+        if "adapter" not in block or "attn" not in block:
+            return block
+        ad = block["adapter"]
+        if "w" not in ad:
+            return block
+        attn = dict(block["attn"])
+        wo = attn["wo"]
+        w = ad["w"].astype(jnp.float32)
+        b = ad["b"].astype(jnp.float32)
+        wo32 = wo.astype(jnp.float32)
+        if pos == "attn_concat":
+            # stacked leaves: (L, qd, d) and (L, qd)/(L, d)
+            new_wo = wo32 * w[..., :, None]
+            extra_bias = jnp.einsum("...i,...ij->...j", b, wo32)
+        else:
+            new_wo = wo32 * w[..., None, :]
+            extra_bias = b
+        bo = attn.get("bo")
+        if bo is None:
+            bo = jnp.zeros(new_wo.shape[:-2] + new_wo.shape[-1:], jnp.float32)
+        attn["wo"] = new_wo.astype(wo.dtype)
+        attn["bo"] = (bo.astype(jnp.float32) * (w if pos == "attn_out" else 1.0)
+                      + extra_bias).astype(jnp.float32)
+        block = dict(block)
+        block["attn"] = attn
+        block["adapter"] = {
+            "w": jnp.ones_like(ad["w"]),
+            "b": jnp.zeros_like(ad["b"]),
+        }
+        return block
+
+    new_params = dict(params)
+    for key in ("blocks", "enc_blocks"):
+        if key not in params:
+            continue
+        new_groups = {}
+        for gname, group in params[key].items():
+            new_groups[gname] = {
+                sname: fold_block(slot) for sname, slot in group.items()
+            }
+        new_params[key] = new_groups
+    return new_params
+
+
+# ---------------------------------------------------------------------------
+# Multi-task adapter banks (batched Hadamard serving, a la multi-LoRA)
+# ---------------------------------------------------------------------------
+
+
+def build_bank(param_list: List):
+    """Stack T tasks' params into a bank: adapter leaves (L, d) -> (L, T, d).
+
+    Non-adapter leaves must be shared (taken from task 0).
+    """
+
+    def stack(path, *leaves):
+        if ADAPTER_RE.search(path):
+            return jnp.stack(leaves, axis=-2)  # (..., T, d)
+        return leaves[0]
+
+    return jax.tree_util.tree_map_with_path(
+        lambda p, *ls: stack(tu.path_str(p), *ls), *param_list
+    )
+
+
+def select_tasks(bank_params, task_ids):
+    """Resolve a bank into per-request adapters: (L, T, d) -> (L, B, d)."""
+
+    def sel(path, v):
+        if ADAPTER_RE.search(path):
+            return jnp.take(v, task_ids, axis=-2)
+        return v
+
+    return tu.map_with_path(sel, bank_params)
+
+
+# ---------------------------------------------------------------------------
+# Introspection helpers
+# ---------------------------------------------------------------------------
+
+
+def adapter_vectors(params, cfg: ModelCfg) -> Dict[str, np.ndarray]:
+    """Gather all layers' (w, b) as (n_layers, d) arrays in layer order."""
+    ws, bs = [], []
+    for gi, g in enumerate(cfg.groups):
+        group = params["blocks"][f"g{gi}"]
+        for r in range(g.repeats):
+            for si in range(len(g.slots)):
+                ad = group[f"slot{si}"].get("adapter")
+                if ad is None or "w" not in ad:
+                    continue
+                ws.append(np.asarray(ad["w"][r], np.float32))
+                bs.append(np.asarray(ad["b"][r], np.float32))
+    return {"w": np.stack(ws), "b": np.stack(bs)}

@@ -1,0 +1,183 @@
+"""PEFT strategy registry: which params exist and which are trainable.
+
+A strategy is (adapter_kind, trainable path patterns). The trainer
+partitions the param tree with the strategy's mask, differentiates only the
+trainable subtree, and keeps optimizer state only for it — so the paper's
+0.033 % trainable fraction translates directly into a ~3000x smaller
+optimizer footprint and DP gradient all-reduce.
+
+Stages (paper §3.2):
+  stage 1: train only the classification head (pooler + classifier).
+  stage 2: reload the head, freeze it, train adapter + FFN-output norm.
+For decoder-LM fine-tuning there is no classifier; stage 1 is skipped and
+stage 2 trains adapter + ffn_norm.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common import tree as tu
+from repro.common.types import AdapterCfg, ModelCfg
+
+HEAD_PATTERNS = (r"^pooler/", r"^classifier/")
+
+# paper Table 4 module names:
+#   W = adapter weight, B = adapter bias,
+#   N = ffn-output ("post-intermediate") norm, A = attention-output norm
+MODULE_PATTERNS = {
+    "W": (r"/adapter/w$",),
+    "B": (r"/adapter/b$",),
+    "N": (r"/ffn_norm/",),
+    "A": (r"/attn_norm/",),
+}
+
+
+@dataclass(frozen=True)
+class Strategy:
+    name: str
+    adapter_kind: str  # 'none' | 'hadamard' | 'lora' | 'houlsby' | 'ia3'
+    trainable: Tuple[str, ...]
+    two_stage: bool = False
+    adapter_position: str = "attn_out"
+
+
+STRATEGIES = {
+    "full": Strategy("full", "none", (r".*",)),
+    "classifier_only": Strategy("classifier_only", "none", HEAD_PATTERNS),
+    # the paper: adapter W+B plus the post-intermediate norm, two-stage
+    "hadamard": Strategy(
+        "hadamard", "hadamard",
+        MODULE_PATTERNS["W"] + MODULE_PATTERNS["B"] + MODULE_PATTERNS["N"],
+        two_stage=True,
+    ),
+    # literal Eq. 7 placement variant (pre-W_O on Concat(heads))
+    "hadamard_concat": Strategy(
+        "hadamard_concat", "hadamard",
+        MODULE_PATTERNS["W"] + MODULE_PATTERNS["B"] + MODULE_PATTERNS["N"],
+        two_stage=True, adapter_position="attn_concat",
+    ),
+    # baselines from paper Table 3
+    "bitfit": Strategy(
+        "bitfit", "none",
+        (r"/b[qkvio]$", r"/bias$", r"_b$", r"_bias$") + HEAD_PATTERNS,
+    ),
+    "lora": Strategy("lora", "lora", (r"/adapter/",) + HEAD_PATTERNS),
+    "houlsby": Strategy(
+        "houlsby", "houlsby",
+        (r"/adapter/", r"/attn_norm/", r"/ffn_norm/") + HEAD_PATTERNS,
+    ),
+    "ia3": Strategy("ia3", "ia3", (r"/adapter/",) + HEAD_PATTERNS),
+    "ln_tuning": Strategy(
+        "ln_tuning", "none", (r"/ffn_norm/", r"/attn_norm/") + HEAD_PATTERNS
+    ),
+}
+
+
+def strategy(name: str) -> Strategy:
+    return STRATEGIES[name]
+
+
+def ablation_strategy(modules: str) -> Strategy:
+    """Paper Table 4: e.g. modules='B+N' -> only those unfrozen."""
+    pats: Tuple[str, ...] = ()
+    for m in modules.split("+"):
+        pats = pats + MODULE_PATTERNS[m.strip()]
+    return Strategy(f"hadamard[{modules}]", "hadamard", pats, two_stage=True)
+
+
+def attach(cfg: ModelCfg, strat: Strategy) -> ModelCfg:
+    """Return a config whose param tree contains the strategy's adapter."""
+    return cfg.replace(
+        adapter=AdapterCfg(
+            kind=strat.adapter_kind,
+            position=strat.adapter_position,
+            lora_rank=cfg.adapter.lora_rank,
+            houlsby_dim=cfg.adapter.houlsby_dim,
+        )
+        if strat.adapter_kind != "none"
+        else AdapterCfg(kind="none")
+    )
+
+
+def trainable_mask(params, strat: Strategy, stage: int = 2):
+    if strat.two_stage and stage == 1:
+        return tu.mask_from_patterns(params, HEAD_PATTERNS)
+    return tu.mask_from_patterns(params, strat.trainable)
+
+
+def head_mask(params):
+    return tu.mask_from_patterns(params, HEAD_PATTERNS)
+
+
+def param_stats(params, mask):
+    total = tu.count_params(params)
+    trainable = tu.count_masked(params, mask)
+    return {
+        "total": total,
+        "trainable": trainable,
+        "fraction": trainable / max(total, 1),
+        "percent": 100.0 * trainable / max(total, 1),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Per-layer gating (paper Table 5 / Fig 4: unfreeze only the top-k layers)
+# ---------------------------------------------------------------------------
+
+
+def layer_gate(params, cfg: ModelCfg, top_layers: Optional[int]):
+    """Gradient gate: 1.0 everywhere except stacked adapter/ffn_norm leaves
+    of layers below (n_layers - top_layers), which get 0.0.
+
+    Returns a pytree of scalars / (repeats, 1...) arrays to multiply grads by.
+    """
+    if top_layers is None:
+        return jax.tree.map(lambda v: 1.0, params)
+
+    n_total = sum(g.n_layers for g in cfg.groups)
+    first_enabled = max(0, n_total - top_layers)
+
+    # global layer index of each (group, repeat, slot_position)
+    offsets = {}
+    idx = 0
+    for gi, g in enumerate(cfg.groups):
+        offsets[gi] = idx
+        idx += g.n_layers
+
+    def gate(path: str, v):
+        import re
+
+        m = re.search(r"blocks/g(\d+)/slot(\d+)/(adapter|ffn_norm)/", path)
+        if not m:
+            return 1.0
+        gi, si = int(m.group(1)), int(m.group(2))
+        g = cfg.groups[gi]
+        repeats = g.repeats
+        nslots = len(g.slots)
+        layer_ids = offsets[gi] + np.arange(repeats) * nslots + si
+        gates = (layer_ids >= first_enabled).astype(np.float32)
+        shape = (repeats,) + (1,) * (v.ndim - 1)
+        return jnp.asarray(gates).reshape(shape)
+
+    return tu.map_with_path(gate, params)
+
+
+def gated_param_count(params, mask, gate_tree) -> int:
+    """Trainable params after layer gating (for Table 5 fractions)."""
+    count = 0
+    for (leaf, m, g) in zip(
+        jax.tree.leaves(params), jax.tree.leaves(mask), jax.tree.leaves(gate_tree)
+    ):
+        if not m or leaf is None:
+            continue
+        if isinstance(g, (float, int)):
+            count += int(np.prod(leaf.shape)) * int(g != 0.0)
+        else:
+            per_layer = int(np.prod(leaf.shape[1:]))
+            count += int(np.asarray(g).sum()) * per_layer
+    return count

@@ -1,0 +1,110 @@
+"""Pallas TPU flash-attention forward kernel.
+
+Tiling: grid = (B, KH*G, nq, nk) with the kv-block axis innermost; running
+(m, l, acc) state lives in VMEM scratch and persists across the sequential
+nk sweep (the canonical TPU flash pattern - the MXU sees (bq, D) x (D, bk)
+tiles, the VPU does the rescaling). GQA is handled in the index map: query
+head h reads kv head h // G, so grouped K/V blocks are fetched once per
+group without materializing repeats.
+
+Supports causal and local-window masking and gemma2 logit soft-capping.
+This is the TPU fast path; the portable chunked implementation with the
+custom VJP lives in repro.models.flash, and the dense oracle in ref.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, cap: float, causal: bool, window: Optional[int],
+            bq: int, bk: int, nk: int, sq: int, skv: int):
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    i = pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32)  # (bq, D)
+    k = k_ref[0, 0].astype(jnp.float32)  # (bk, D)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if cap:
+        s = jnp.tanh(s / cap) * cap
+
+    # right-aligned absolute positions (self-attention, same offset)
+    qp = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + (skv - sq)
+    kp = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    valid = kp < skv
+    if causal:
+        valid &= kp <= qp
+    if window is not None:
+        valid &= qp - kp < window
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=-1)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finish():
+        l = l_scr[...]
+        safe = jnp.where(l > 0, l, 1.0)
+        o_ref[0, 0] = (acc_scr[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_tpu(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None,
+                        scale: Optional[float] = None, cap: float = 0.0,
+                        block_q: int = 128, block_k: int = 128,
+                        interpret: bool = True):
+    """q: (B, H, Sq, D); k,v: (B, KH, Skv, D) with H = KH*G. Forward only."""
+    B, H, Sq, D = q.shape
+    KH, Skv = k.shape[1], k.shape[2]
+    G = H // KH
+    scale = scale if scale is not None else D**-0.5
+    bq = min(block_q, Sq)
+    bk = min(block_k, Skv)
+    nq = (Sq + bq - 1) // bq
+    nk = (Skv + bk - 1) // bk
+
+    kern = functools.partial(
+        _kernel, scale=float(scale), cap=float(cap), causal=causal,
+        window=window, bq=bq, bk=bk, nk=nk, sq=Sq, skv=Skv)
+
+    return pl.pallas_call(
+        kern,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            # GQA in the index map: query head h reads kv head h // G
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

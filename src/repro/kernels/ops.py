@@ -1,0 +1,78 @@
+"""Dispatch layer over kernel implementations.
+
+impl resolution:
+  'auto'       -> 'pallas' on TPU, 'jnp' elsewhere (CPU container => jnp)
+  'pallas'     -> compiled Pallas kernel (TPU)
+  'interpret'  -> Pallas kernel body interpreted on CPU (used by tests)
+  'jnp'        -> the pure-jnp reference / portable implementation
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.attention import flash_attention_tpu
+from repro.kernels.hadamard import fused_adapter_residual_norm, hadamard_affine
+from repro.kernels.multitask import multitask_hadamard_tpu
+from repro.kernels.rwkv6 import wkv6_tpu
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(impl: str) -> str:
+    if impl != "auto":
+        return impl
+    return "pallas" if _on_tpu() else "jnp"
+
+
+def hadamard(x, w, b, impl: str = "auto"):
+    impl = _resolve(impl)
+    if impl == "jnp":
+        return ref.hadamard_ref(x, w, b)
+    return hadamard_affine(x, w, b, impl == "interpret")
+
+
+def fused_adapter_norm(x, res, w, b, scale, bias=None, eps: float = 1e-6,
+                       impl: str = "auto"):
+    impl = _resolve(impl)
+    if impl == "jnp":
+        return ref.fused_adapter_residual_norm_ref(x, res, w, b, scale,
+                                                   eps=eps, bias=bias)
+    return fused_adapter_residual_norm(x, res, w, b, scale, eps=eps, bias=bias,
+                                       interpret=impl == "interpret")
+
+
+def flash_attention(q, k, v, causal: bool = True, window: Optional[int] = None,
+                    scale: Optional[float] = None, cap: float = 0.0,
+                    impl: str = "auto", **tiles):
+    impl = _resolve(impl)
+    if impl == "jnp":
+        # GQA oracle: repeat kv heads
+        G = q.shape[1] // k.shape[1]
+        kr = jnp.repeat(k, G, axis=1)
+        vr = jnp.repeat(v, G, axis=1)
+        return ref.attention_ref(q, kr, vr, causal=causal, window=window,
+                                 scale=scale, cap=cap)
+    return flash_attention_tpu(q, k, v, causal=causal, window=window,
+                               scale=scale, cap=cap,
+                               interpret=impl == "interpret", **tiles)
+
+
+def wkv6(r, k, v, w, u, impl: str = "auto", chunk: int = 64):
+    impl = _resolve(impl)
+    if impl == "jnp":
+        return ref.wkv6_ref(r, k, v, w, u)[0]
+    return wkv6_tpu(r, k, v, w, u, chunk=chunk, interpret=impl == "interpret")
+
+
+def multitask_hadamard(x, w_bank, b_bank, task_ids, impl: str = "auto"):
+    impl = _resolve(impl)
+    if impl == "jnp":
+        return ref.multitask_hadamard_ref(x, w_bank, b_bank, task_ids)
+    return multitask_hadamard_tpu(x, w_bank, b_bank, task_ids,
+                                  interpret=impl == "interpret")

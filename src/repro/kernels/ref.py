@@ -1,0 +1,92 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function is the mathematically-direct implementation with no tiling -
+tests sweep shapes/dtypes and assert the kernels (interpret mode on CPU,
+compiled on TPU) match these within tolerance.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# --- hadamard adapter (paper Eq. 5) ----------------------------------------
+
+
+def hadamard_ref(x, w, b):
+    return x * w + b
+
+
+def fused_adapter_residual_norm_ref(x, res, w, b, scale, eps: float = 1e-6,
+                                    bias=None):
+    """The fusion the framework uses on TPU: one HBM round-trip for
+      x_new = (x*w + b) + res          (adapter + residual add)
+      h     = Norm(x_new) * scale (+bias)   (the ffn_norm that follows)
+    Returns (x_new, h).
+    """
+    x_new = (x.astype(jnp.float32) * w.astype(jnp.float32)
+             + b.astype(jnp.float32) + res.astype(jnp.float32))
+    if bias is not None:  # LayerNorm
+        mu = x_new.mean(-1, keepdims=True)
+        var = jnp.square(x_new - mu).mean(-1, keepdims=True)
+        h = (x_new - mu) * jax.lax.rsqrt(var + eps)
+        h = h * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    else:  # RMSNorm
+        ms = jnp.square(x_new).mean(-1, keepdims=True)
+        h = x_new * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)
+    return x_new.astype(x.dtype), h.astype(x.dtype)
+
+
+def multitask_hadamard_ref(x, w_bank, b_bank, task_ids):
+    """x: (B,S,d); banks: (T,d); task_ids: (B,)."""
+    w = w_bank[task_ids][:, None]
+    b = b_bank[task_ids][:, None]
+    return x * w + b
+
+
+# --- attention ---------------------------------------------------------------
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+                  scale: Optional[float] = None, cap: float = 0.0):
+    """Dense oracle. q: (B,H,Sq,D); k,v: (B,H,Skv,D). Same-offset self-attn."""
+    B, H, Sq, D = q.shape
+    Skv = k.shape[2]
+    scale = scale if scale is not None else D**-0.5
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if cap:
+        s = jnp.tanh(s / cap) * cap
+    qp = jnp.arange(Sq)[:, None] + (Skv - Sq)  # right-aligned positions
+    kp = jnp.arange(Skv)[None, :]
+    m = jnp.ones((Sq, Skv), bool)
+    if causal:
+        m = m & (kp <= qp)
+    if window is not None:
+        m = m & (qp - kp < window)
+    s = jnp.where(m[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+# --- rwkv6 wkv ---------------------------------------------------------------
+
+
+def wkv6_ref(r, k, v, w, u, s0=None):
+    """Sequential oracle for the RWKV6 recurrence.
+
+    r,k,v,w: (B,H,T,n); u: (H,n); s0: (B,H,n,n) or None.
+    Returns (o (B,H,T,n), s_final).
+    """
+    B, H, T, n = r.shape
+    S = jnp.zeros((B, H, n, n), jnp.float32) if s0 is None else s0.astype(jnp.float32)
+    outs = []
+    for t in range(T):
+        kt, vt, rt, wt = (x[:, :, t].astype(jnp.float32) for x in (k, v, r, w))
+        kv = kt[..., :, None] * vt[..., None, :]
+        o = jnp.einsum("bhi,bhij->bhj", rt, S + u[None, :, :, None] * kv)
+        S = wt[..., :, None] * S + kv
+        outs.append(o)
+    return jnp.stack(outs, axis=2).astype(r.dtype), S

@@ -1,0 +1,461 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: the two lines above MUST run before any other import (jax locks the
+# device count on first init), which is why the docstring sits below them
+# and no `from __future__` import is used in this file.
+
+_DOC = """Multi-pod dry-run: lower + compile every (architecture x input
+shape) on the production meshes, and extract the roofline inputs from the
+compiled artifacts.
+
+Methodology (see EXPERIMENTS.md §Dry-run):
+  * The FULL program (scan-over-layers) is compiled per cell: this proves
+    the sharding config is coherent (no sharding mismatch / unsupported
+    collective) and provides memory_analysis().
+  * cost_analysis() counts a while-loop body ONCE regardless of trip count
+    (verified empirically), so FLOPs/bytes/collective-bytes come from small
+    PROXY compiles with every scan unrolled (cost mode) at group repeats
+    1 and 2, extrapolated linearly over depth: cost is affine in each
+    group's repeat count by construction. For the attention-free rwkv6
+    (whose time recurrence is itself a scan), proxies are lowered at two
+    reduced sequence lengths as well and the (depth x time) bilinear form
+    is solved exactly - rwkv6 cost is affine in T.
+  * All reported numbers are PER-DEVICE (XLA reports the SPMD module).
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma2-27b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out results/dryrun.json
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.common.costmode import cost_mode_ctx
+from repro.common.types import SHAPES, ModelCfg, OptimCfg, ShapeSpec
+from repro.configs import ASSIGNED, get as get_cfg
+from repro.core import peft
+from repro.dist.api import use_mesh
+from repro.dist.sharding import (batch_spec, cache_shardings, params_shardings)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_step_fn, input_specs, params_shapes, state_shapes
+
+# ---------------------------------------------------------------------------
+# HLO collective accounting
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+_SHAPE_RE = re.compile(r"\b([a-z]+\d*)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum operand bytes of every collective op (per-device SPMD module)."""
+    out = {"all-gather": 0, "all-reduce": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0, "count": 0}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group(1)
+        # operand shapes appear after the '('; result shapes before it
+        operands = line[m.end():]
+        shapes = _SHAPE_RE.findall(operands)
+        if not shapes:
+            shapes = _SHAPE_RE.findall(line[: m.start()])
+        out[op] += sum(_shape_bytes(d, s) for d, s in shapes)
+        out["count"] += 1
+    out["total"] = sum(out[k] for k in
+                       ("all-gather", "all-reduce", "reduce-scatter",
+                        "all-to-all", "collective-permute"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Analytic MODEL_FLOPS (the "useful compute" yardstick)
+# ---------------------------------------------------------------------------
+
+
+def _matmul_param_count(cfg: ModelCfg) -> Dict[str, float]:
+    """Active and total matmul-participating params (embeddings excluded,
+    lm_head included; MoE routed experts scaled by top_k/E for 'active')."""
+    from repro.common import tree as tu
+
+    shapes = params_shapes(cfg)
+    total = active = 0.0
+    for path, leaf in tu.flatten_with_paths(shapes):
+        if leaf is None or len(leaf.shape) == 0:
+            continue
+        n = float(np.prod(leaf.shape))
+        if re.search(r"(embed|pos_embed|type_embed)/table", path):
+            continue
+        total += n
+        if re.search(r"moe/w[igo]$", path):
+            frac = cfg.moe.top_k / cfg.moe.n_experts
+            active += n * frac
+        else:
+            active += n
+    if cfg.tie_embeddings:  # tied unembedding still does the matmul
+        v = cfg.vocab_size * cfg.d_model
+        total += v
+        active += v
+    return {"total": total, "active": active}
+
+
+def _attn_layers(cfg: ModelCfg):
+    out = []
+    for g in tuple(cfg.groups) + tuple(cfg.enc_groups):
+        for s in g.slots:
+            if s.kind == "attn":
+                out.extend([s] * g.repeats)
+    return out
+
+
+def analytic_model_flops(cfg: ModelCfg, spec: ShapeSpec) -> Dict[str, float]:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE) + attention dots.
+    For PEFT training frozen matmuls skip their dW: ~4*N*D + 6*N_adapter*D."""
+    counts = _matmul_param_count(cfg)
+    B, S = spec.global_batch, spec.seq_len
+    if spec.kind == "train":
+        D = B * S
+        fwd_mult, train_mult = 2.0, 6.0
+    elif spec.kind == "prefill":
+        D = B * S
+        fwd_mult, train_mult = 2.0, 2.0
+    else:  # decode: one token per sequence
+        D = B * 1
+        fwd_mult, train_mult = 2.0, 2.0
+
+    # attention score+value dots (not in N): 4*B*S_kv*H*Dh per query token
+    attn = 0.0
+    for s in _attn_layers(cfg):
+        kv_span = S if s.window is None else min(s.window, S)
+        if spec.kind == "decode":
+            attn += 4.0 * B * 1 * kv_span * cfg.n_heads * cfg.head_dim
+        else:
+            # mean kv span over causal positions ~ S/2 (full) or ~window
+            span = kv_span / 2 if s.window is None else kv_span
+            attn += 4.0 * B * S * span * cfg.n_heads * cfg.head_dim
+    attn_mult = 3.0 if spec.kind == "train" else 1.0
+
+    n_act = counts["active"]
+    flops = train_mult * n_act * D + attn_mult * attn
+    # PEFT: frozen weights skip dW (1/3 of each matmul's backward)
+    flops_peft = (
+        (4.0 * n_act * D + attn_mult * attn) if spec.kind == "train" else flops
+    )
+    return {
+        "model_flops": flops,
+        "model_flops_peft": flops_peft,
+        "n_active_params": n_act,
+        "n_total_params": counts["total"],
+    }
+
+
+# ---------------------------------------------------------------------------
+# Cell construction
+# ---------------------------------------------------------------------------
+
+
+def _replace_repeats(cfg: ModelCfg, dec_repeats, enc_repeats) -> ModelCfg:
+    groups = tuple(
+        dataclasses.replace(g, repeats=r) for g, r in zip(cfg.groups, dec_repeats))
+    enc = tuple(
+        dataclasses.replace(g, repeats=r)
+        for g, r in zip(cfg.enc_groups, enc_repeats))
+    return cfg.replace(groups=groups, enc_groups=enc)
+
+
+_MB = [0]
+
+
+def _apply_peft(cfg: ModelCfg, peft_name: str) -> ModelCfg:
+    return peft.attach(cfg, peft.strategy(peft_name))
+
+
+def _lower_cell(cfg: ModelCfg, spec: ShapeSpec, mesh, peft_name: str,
+                donate: bool = True, microbatch: int = 0):
+    """Lower one cell; returns (lowered, meta)."""
+    strat = peft.strategy(peft_name)
+    ocfg = OptimCfg()
+    fn, kind = build_step_fn(cfg, spec, ocfg,
+                             microbatch=microbatch or _MB[0])
+
+    with use_mesh(mesh):
+        if kind == "train":
+            st_shapes = state_shapes(cfg, strat, ocfg)
+            repl = NamedSharding(mesh, P())
+
+            def shard_params_tree(tree):
+                return params_shardings(tree, cfg, mesh)
+
+            st_shardings = {
+                "step": repl,
+                "trainable": shard_params_tree(st_shapes["trainable"]),
+                "frozen": shard_params_tree(st_shapes["frozen"]),
+                "opt": {
+                    "m": shard_params_tree(st_shapes["opt"]["m"]),
+                    "v": shard_params_tree(st_shapes["opt"]["v"]),
+                    "count": repl,
+                },
+            }
+            batch = input_specs(cfg, spec)
+            b_shardings = {
+                k: NamedSharding(mesh, batch_spec(mesh, len(v.shape), v.shape))
+                for k, v in batch.items()
+            }
+            jfn = jax.jit(fn, in_shardings=(st_shardings, b_shardings),
+                          donate_argnums=(0,) if donate else ())
+            return jfn.lower(st_shapes, batch), kind
+
+        p_shapes = params_shapes(cfg)
+        p_shardings = params_shardings(p_shapes, cfg, mesh)
+        if kind == "prefill":
+            batch = input_specs(cfg, spec)
+            b_shardings = {
+                k: NamedSharding(mesh, batch_spec(mesh, len(v.shape), v.shape))
+                for k, v in batch.items()
+            }
+            jfn = jax.jit(fn, in_shardings=(p_shardings, b_shardings))
+            return jfn.lower(p_shapes, batch), kind
+
+        # decode
+        d = input_specs(cfg, spec)
+        c_shardings = cache_shardings(d["caches"], cfg, mesh)
+        tok_sh = NamedSharding(mesh, batch_spec(mesh, 2, d["token"].shape))
+        pos_sh = NamedSharding(mesh, P())
+        jfn = jax.jit(fn, in_shardings=(p_shardings, c_shardings, tok_sh, pos_sh),
+                      donate_argnums=(1,) if donate else ())
+        return jfn.lower(p_shapes, d["caches"], d["token"], d["pos"]), kind
+
+
+def _compile_costs(cfg, spec, mesh, peft_name):
+    lowered, _ = _lower_cell(cfg, spec, mesh, peft_name, donate=False)
+    compiled = lowered.compile()
+    ca = compiled.cost_analysis() or {}
+    colls = collective_bytes(compiled.as_text())
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "coll": float(colls["total"]),
+        "coll_detail": colls,
+    }
+
+
+def _combine(base, diffs_scaled):
+    out = dict(base)
+    for d, scale in diffs_scaled:
+        for k in ("flops", "bytes", "coll"):
+            out[k] = out[k] + max(0.0, d[k] - base[k]) * scale
+    return out
+
+
+def proxy_costs(cfg: ModelCfg, spec: ShapeSpec, mesh, peft_name: str) -> Dict:
+    """Exact per-device costs via unrolled proxies + linear extrapolation."""
+    # bigger attention chunks keep unrolled tile counts manageable
+    proxy_cfg = cfg.replace(q_chunk=max(cfg.q_chunk, 2048),
+                            kv_chunk=max(cfg.kv_chunk, 2048))
+    dec_R = [g.repeats for g in proxy_cfg.groups]
+    enc_R = [g.repeats for g in proxy_cfg.enc_groups]
+
+    has_rwkv = any(s.kind == "rwkv" for g in cfg.groups for s in g.slots)
+    if has_rwkv and spec.kind != "decode" and spec.seq_len > 128:
+        # rwkv6's true cost is exactly affine in T (attention-free), but the
+        # unrolled-scan autodiff in cost mode adds an O(T^2) accumulation
+        # artifact (cotangents scattered into stacked buffers). Per depth L
+        # we fit F(T) = a_L + b_L*T + c*T^2 on three T samples and DROP the
+        # artifact term; a_L and b_L are then linear in L (exact).
+        proxy_cfg = proxy_cfg.replace(rwkv_chunk=32)
+        Ts = (32, 64, 96)
+        vals = {}
+        for L in (1, 2):
+            for T in Ts:
+                c = _replace_repeats(proxy_cfg, [L] * len(dec_R), enc_R)
+                s = dataclasses.replace(spec, seq_len=T)
+                with cost_mode_ctx():
+                    vals[(L, T)] = _compile_costs(c, s, mesh, peft_name)
+        out = {}
+        L_full, T_full = dec_R[0], spec.seq_len
+        t1, t2, t3 = Ts
+        for k in ("flops", "bytes", "coll"):
+            ab = {}
+            for L in (1, 2):
+                f1, f2, f3 = (vals[(L, t)][k] for t in Ts)
+                # exact 3-point quadratic solve on an even grid
+                cq = (f3 - 2 * f2 + f1) / (2 * (t2 - t1) ** 2)
+                bq = (f2 - f1) / (t2 - t1) - cq * (t1 + t2)
+                aq = f1 - bq * t1 - cq * t1 * t1
+                ab[L] = (aq, bq)
+            Ca = ab[2][0] - ab[1][0]
+            Cb = ab[2][1] - ab[1][1]
+            A0 = ab[1][0] - Ca
+            B0 = ab[1][1] - Cb
+            out[k] = max(0.0, (A0 + Ca * L_full) + (B0 + Cb * L_full) * T_full)
+        out["method"] = "per-depth quadratic-in-T fit (artifact dropped)"
+        return out
+
+    ones_dec = [min(1, r) for r in dec_R]
+    ones_enc = [min(1, r) for r in enc_R]
+    with cost_mode_ctx():
+        base = _compile_costs(
+            _replace_repeats(proxy_cfg, ones_dec, ones_enc), spec, mesh, peft_name)
+        diffs = []
+        for i, r in enumerate(dec_R):
+            if r <= 1:
+                continue
+            bump = list(ones_dec)
+            bump[i] = 2
+            d = _compile_costs(
+                _replace_repeats(proxy_cfg, bump, ones_enc), spec, mesh, peft_name)
+            diffs.append((d, r - 1))
+        for i, r in enumerate(enc_R):
+            if r <= 1:
+                continue
+            bump = list(ones_enc)
+            bump[i] = 2
+            d = _compile_costs(
+                _replace_repeats(proxy_cfg, ones_dec, bump), spec, mesh, peft_name)
+            diffs.append((d, r - 1))
+    out = _combine(base, diffs)
+    out["method"] = "per-group linear"
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Cell runner
+# ---------------------------------------------------------------------------
+
+
+def skip_reason(cfg: ModelCfg, spec: ShapeSpec) -> Optional[str]:
+    if spec.name == "long_500k" and not cfg.sub_quadratic:
+        return ("full-range attention layers present -> not sub-quadratic; "
+                "long_500k skipped per task spec (see DESIGN.md §5)")
+    return None
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, peft_name: str = "hadamard",
+             with_costs: bool = True, cfg_overrides: Dict = None,
+             microbatch: int = 0) -> Dict:
+    cfg = _apply_peft(get_cfg(arch), peft_name)
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    _MB[0] = microbatch
+    spec = SHAPES[shape]
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_kind, "peft": peft_name,
+           "overrides": dict(cfg_overrides or {})}
+
+    reason = skip_reason(cfg, spec)
+    if reason:
+        rec.update(status="skipped", reason=reason)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.time()
+    try:
+        lowered, kind = _lower_cell(cfg, spec, mesh, peft_name)
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_estimate_bytes": (mem.argument_size_in_bytes
+                                    + mem.output_size_in_bytes
+                                    + mem.temp_size_in_bytes
+                                    - mem.alias_size_in_bytes),
+        }
+        rec["full_colls"] = collective_bytes(compiled.as_text())
+        rec["compile_s"] = round(time.time() - t0, 1)
+        rec["n_devices"] = int(np.prod(mesh.devices.shape))
+        rec["step_kind"] = kind
+        if with_costs:
+            t1 = time.time()
+            rec["costs"] = proxy_costs(cfg, spec, mesh, peft_name)
+            rec["proxy_compile_s"] = round(time.time() - t1, 1)
+        rec.update(analytic_model_flops(cfg, spec))
+        rec["status"] = "ok"
+    except Exception as e:  # a failure here is a bug in the system
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def all_cells(mesh_kinds, peft_name):
+    for arch in sorted(ASSIGNED):
+        for shape in SHAPES:
+            for mk in mesh_kinds:
+                yield arch, shape, mk, peft_name
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--peft", default="hadamard")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-costs", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default="results/dryrun.json")
+    args = ap.parse_args()
+
+    mesh_kinds = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    records = {}
+    if os.path.exists(args.out) and not args.force:
+        with open(args.out) as f:
+            records = {tuple(r["key"]): r for r in json.load(f)}
+
+    if args.all:
+        cells = list(all_cells(mesh_kinds, args.peft))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        cells = [(args.arch, args.shape, mk, args.peft) for mk in mesh_kinds]
+
+    for arch, shape, mk, pf in cells:
+        key = (arch, shape, mk, pf)
+        if key in records and records[key].get("status") == "ok":
+            print(f"[skip-cached] {key}")
+            continue
+        print(f"[dryrun] {arch} x {shape} x {mk} ({pf}) ...", flush=True)
+        rec = run_cell(arch, shape, mk, pf, with_costs=not args.no_costs)
+        rec["key"] = list(key)
+        records[key] = rec
+        status = rec["status"]
+        extra = rec.get("reason") or rec.get("error") or (
+            f"mem={rec['memory']['peak_estimate_bytes']/2**30:.2f}GiB "
+            f"compile={rec.get('compile_s')}s")
+        print(f"  -> {status}: {extra}", flush=True)
+        with open(args.out, "w") as f:
+            json.dump(list(records.values()), f, indent=1)
+    print(f"wrote {args.out} ({len(records)} records)")
+
+
+if __name__ == "__main__":
+    main()

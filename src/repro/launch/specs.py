@@ -1,0 +1,118 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) cell, plus the
+step functions the dry-run lowers. Nothing here allocates device memory.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.types import ModelCfg, OptimCfg, ShapeSpec
+from repro.core import peft
+from repro.models import model as M
+from repro.train.steps import build_train_step, make_state
+
+I32 = jnp.int32
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def params_shapes(cfg: ModelCfg):
+    return jax.eval_shape(lambda k: M.init_params(k, cfg), jax.random.PRNGKey(0))
+
+
+def state_shapes(cfg: ModelCfg, strat: peft.Strategy, ocfg: OptimCfg):
+    return jax.eval_shape(
+        lambda k: make_state(k, cfg, strat, ocfg), jax.random.PRNGKey(0))
+
+
+def input_specs(cfg: ModelCfg, spec: ShapeSpec) -> Dict:
+    """Model-input stand-ins for one shape, keyed per the family's batch."""
+    B, S = spec.global_batch, spec.seq_len
+    cdt = cfg.cdtype
+    if spec.kind in ("train", "prefill"):
+        if cfg.family == "vlm":
+            st = S - cfg.n_image_tokens
+            out = {
+                "tokens": _sds((B, st), I32),
+                "patches": _sds((B, cfg.n_image_tokens, cfg.d_model), cdt),
+            }
+            if spec.kind == "train":
+                out["labels"] = _sds((B, st), I32)
+            return out
+        if cfg.family == "encdec":
+            out = {
+                "frames": _sds((B, cfg.n_audio_frames, cfg.d_model), cdt),
+                "tokens": _sds((B, S), I32),
+            }
+            if spec.kind == "train":
+                out["labels"] = _sds((B, S), I32)
+            return out
+        if cfg.family == "encoder":
+            out = {"tokens": _sds((B, S), I32),
+                   "type_ids": _sds((B, S), I32)}
+            if spec.kind == "train":
+                out["labels"] = _sds((B,), I32)
+            return out
+        out = {"tokens": _sds((B, S), I32)}
+        if spec.kind == "train":
+            out["labels"] = _sds((B, S), I32)
+        return out
+
+    # decode: one new token against a cache of seq_len
+    if cfg.family == "encdec":
+        caches = jax.eval_shape(
+            functools.partial(M.init_encdec_caches, cfg, B, S))
+    else:
+        caches = jax.eval_shape(
+            functools.partial(M.init_decode_caches, cfg, B, S))
+    return {
+        "caches": caches,
+        "token": _sds((B, 1), I32),
+        "pos": _sds((), I32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Step functions (what actually gets lowered per shape kind)
+# ---------------------------------------------------------------------------
+
+
+def build_step_fn(cfg: ModelCfg, spec: ShapeSpec, ocfg: OptimCfg = OptimCfg(),
+                  microbatch: int = 0):
+    """Returns (fn, kind) where kind in {'train','prefill','decode'} and
+    fn's signature matches the corresponding spec dicts."""
+    if spec.kind == "train":
+        step = build_train_step(cfg, ocfg, microbatch=microbatch)
+        return step, "train"
+
+    if spec.kind == "prefill":
+        S = spec.seq_len
+
+        if cfg.family == "encdec":
+            def fn(params, batch):
+                return M.prefill_encdec(params, cfg, batch["frames"],
+                                        batch["tokens"], cache_len=S)
+        elif cfg.family == "vlm":
+            def fn(params, batch):
+                return M.prefill_lm(params, cfg, batch["tokens"], cache_len=S,
+                                    patches=batch["patches"])
+        else:
+            def fn(params, batch):
+                return M.prefill_lm(params, cfg, batch["tokens"], cache_len=S)
+        return fn, "prefill"
+
+    # decode (serve_step): one token, greedy next-token output
+    if cfg.family == "encdec":
+        def fn(params, caches, token, pos):
+            logits, caches = M.decode_encdec(params, cfg, caches, token, pos)
+            return jnp.argmax(logits[:, -1], -1).astype(I32), caches
+    else:
+        def fn(params, caches, token, pos):
+            logits, caches = M.decode_lm(params, cfg, caches, token, pos)
+            return jnp.argmax(logits[:, -1], -1).astype(I32), caches
+    return fn, "decode"

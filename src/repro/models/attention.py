@@ -1,0 +1,239 @@
+"""Multi-head attention block with GQA, RoPE, qk-norm, local windows,
+soft-capping, KV caches (linear + ring-buffer) and adapter hooks.
+
+The adapter hooks are how the paper's technique (and the LoRA / IA3
+baselines) reach inside attention without forking the model code.
+
+Cache protocol (per attention slot):
+  train:   cache=None, cache_len=None           -> returns (y, None)
+  prefill: cache=None, cache_len=S_cache        -> returns (y, fresh cache)
+  decode:  cache=dict, write_pos=scalar         -> returns (y, updated cache)
+Cross-attention slots store the encoder K/V at prefill ('ck'/'cv') and read
+them back at decode.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.types import AdapterCfg, ModelCfg, Slot
+from repro.models import flash
+from repro.models.layers import apply_rope, dense_init, rms_head_norm
+
+INVALID_POS = jnp.iinfo(jnp.int32).max
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def attn_init(key, cfg: ModelCfg, cross: bool = False):
+    ks = jax.random.split(key, 6)
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    p = {
+        "wq": dense_init(ks[0], d, qd, cfg.pdtype),
+        "wk": dense_init(ks[1], d, kvd, cfg.pdtype),
+        "wv": dense_init(ks[2], d, kvd, cfg.pdtype),
+        "wo": dense_init(ks[3], qd, d, cfg.pdtype),
+    }
+    if cfg.attn_bias:
+        p["bq"] = jnp.zeros((qd,), cfg.pdtype)
+        p["bk"] = jnp.zeros((kvd,), cfg.pdtype)
+        p["bv"] = jnp.zeros((kvd,), cfg.pdtype)
+        p["bo"] = jnp.zeros((d,), cfg.pdtype)
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = jnp.ones((cfg.head_dim,), cfg.pdtype)
+        p["k_norm"] = jnp.ones((cfg.head_dim,), cfg.pdtype)
+    return p
+
+
+def attn_cache_shape(cfg: ModelCfg, slot: Slot, batch: int, cache_len: int):
+    size = cache_len if slot.window is None else min(slot.window, cache_len)
+    kv = (batch, size, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": kv, "v": kv}
+
+
+def ring_positions(size: int, pos):
+    """Absolute positions held by each ring-buffer slot when the current
+    write position is `pos` (slot i holds the latest p <= pos with
+    p % size == i). Slots never written map to INVALID_POS."""
+    i = jnp.arange(size)
+    p = pos - ((pos - i) % size)
+    return jnp.where(p < 0, INVALID_POS, p)
+
+
+# ---------------------------------------------------------------------------
+# Adapter hooks
+# ---------------------------------------------------------------------------
+
+
+def _lora_delta(x, a, b, alpha: float, rank: int):
+    return (x @ a.astype(x.dtype)) @ b.astype(x.dtype) * (alpha / rank)
+
+
+def apply_hadamard(y, ad):
+    """The paper's Eq. 5: elementwise affine on the feature dim.
+
+    Supports per-request adapters for multi-task serving: when w/b are
+    (B, d) they broadcast over the sequence dim of y (B, S, d).
+    """
+    w = ad["w"].astype(y.dtype)
+    b = ad["b"].astype(y.dtype)
+    if w.ndim == 2:  # (B, d): one adapter per request in the batch
+        w, b = w[:, None], b[:, None]
+    return y * w + b
+
+
+# ---------------------------------------------------------------------------
+# Apply
+# ---------------------------------------------------------------------------
+
+
+def apply_attn(
+    p,
+    cfg: ModelCfg,
+    slot: Slot,
+    x,
+    *,
+    q_pos,
+    causal: bool = True,
+    kv_x=None,  # cross-attention source (B, S_enc, d)
+    cache=None,  # decode (or cross-decode) cache for this slot
+    cache_len: Optional[int] = None,  # prefill: build a cache of this size
+    write_pos=None,  # decode: scalar absolute position of the new token
+    adapter=None,
+    adapter_cfg: Optional[AdapterCfg] = None,
+):
+    B, S, _ = x.shape
+    H, KH, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    acfg = adapter_cfg or cfg.adapter
+    cdt = cfg.cdtype
+    is_cross = kv_x is not None or (cache is not None and "ck" in cache)
+
+    wq = p["wq"].astype(cdt)
+    q = x @ wq
+    if adapter is not None and acfg.kind == "lora":
+        q = q + _lora_delta(x, adapter["qa"], adapter["qb"], acfg.lora_alpha,
+                            acfg.lora_rank)
+    if "bq" in p:
+        q = q + p["bq"].astype(cdt)
+    q = q.reshape(B, S, H, Dh)
+    if cfg.qk_norm and "q_norm" in p:
+        q = rms_head_norm(p["q_norm"], q, cfg.norm_eps)
+    if cfg.pos == "rope" and not is_cross:
+        q = apply_rope(q, q_pos, cfg.rope_theta)
+
+    k = v = None
+    if not (is_cross and cache is not None):  # cross-decode skips k/v compute
+        src = x if kv_x is None else kv_x
+        k = src @ p["wk"].astype(cdt)
+        v = src @ p["wv"].astype(cdt)
+        if adapter is not None and acfg.kind == "lora":
+            v = v + _lora_delta(src, adapter["va"], adapter["vb"],
+                                acfg.lora_alpha, acfg.lora_rank)
+        if "bk" in p:
+            k = k + p["bk"].astype(cdt)
+            v = v + p["bv"].astype(cdt)
+        k = k.reshape(B, -1, KH, Dh)
+        v = v.reshape(B, -1, KH, Dh)
+        if cfg.qk_norm and "k_norm" in p and not is_cross:
+            k = rms_head_norm(p["k_norm"], k, cfg.norm_eps)
+        if cfg.pos == "rope" and not is_cross:
+            kpos = q_pos if write_pos is None else jnp.full((S,), write_pos, jnp.int32)
+            k = apply_rope(k, kpos, cfg.rope_theta)
+        if adapter is not None and acfg.kind == "ia3":
+            k = k * adapter["lk"].astype(cdt).reshape(KH, Dh)
+            v = v * adapter["lv"].astype(cdt).reshape(KH, Dh)
+        if cfg.replicate_kv and S > 1:
+            # Perf lever: materialize K/V once per layer, replicated over the
+            # model axis. Without this, sequence-sharded residuals make XLA
+            # re-gather K/V inside EVERY flash kv-chunk iteration (measured
+            # ~8 GB/layer/device of collectives on qwen3-0.6b train_4k).
+            from repro.dist.api import constrain as _con
+
+            k = _con(k, "dp", None, None, None)
+            v = _con(v, "dp", None, None, None)
+
+    # ----- cache handling -----
+    new_cache = None
+    if is_cross:
+        if cache is not None:  # decode: read stored encoder K/V
+            k_att, v_att = cache["ck"], cache["cv"]
+            new_cache = cache
+        else:
+            k_att, v_att = k, v
+            if cache_len is not None:
+                new_cache = {"ck": k, "cv": v}
+        kv_pos = jnp.arange(k_att.shape[1])
+        eff_len = k_att.shape[1]
+    elif cache is not None and write_pos is not None:  # self-attn decode
+        size = cache["k"].shape[1]
+        slot_idx = write_pos % size
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), slot_idx, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), slot_idx, axis=1)
+        new_cache = {"k": ck, "v": cv}
+        if slot.window is None:
+            kv_pos = jnp.arange(size)
+            eff_len = write_pos + 1
+        else:
+            kv_pos = ring_positions(size, write_pos)
+            eff_len = INVALID_POS  # validity entirely via positions
+        k_att, v_att = ck, cv
+    elif cache_len is not None:  # self-attn prefill: build the cache
+        size = cache_len if slot.window is None else min(slot.window, cache_len)
+        kv_pos = q_pos
+        eff_len = S
+        k_att, v_att = k, v
+        if slot.window is None and size == S:
+            new_cache = {"k": k, "v": v}
+        else:
+            tail = min(size, S)
+            zk = jnp.zeros((B, size, KH, Dh), k.dtype)
+            zv = jnp.zeros((B, size, KH, Dh), v.dtype)
+            if slot.window is None:
+                new_cache = {
+                    "k": jax.lax.dynamic_update_slice_in_dim(zk, k[:, S - tail:], S - tail, axis=1),
+                    "v": jax.lax.dynamic_update_slice_in_dim(zv, v[:, S - tail:], S - tail, axis=1),
+                }
+            else:
+                slots = jnp.arange(S - tail, S) % size
+                new_cache = {
+                    "k": zk.at[:, slots].set(k[:, S - tail:]),
+                    "v": zv.at[:, slots].set(v[:, S - tail:]),
+                }
+    else:  # train
+        kv_pos = q_pos
+        eff_len = S
+        k_att, v_att = k, v
+
+    G = H // KH
+    qg = q.reshape(B, S, KH, G, Dh)
+    scale = cfg.query_scale if cfg.query_scale is not None else Dh**-0.5
+    out = flash.attend(
+        qg, k_att, v_att,
+        q_pos=q_pos, kv_pos=kv_pos, kv_len=eff_len,
+        causal=causal and not is_cross,
+        window=slot.window, scale=scale, cap=cfg.attn_softcap,
+        q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+        tile_dtype=cfg.attn_tile_dtype,
+    )
+    out = out.reshape(B, S, H * Dh)
+
+    # --- paper Eq. 7 literal placement: adapter on Concat(heads) ---
+    if adapter is not None and acfg.kind == "hadamard" and acfg.position == "attn_concat":
+        out = apply_hadamard(out, adapter)
+
+    y = out @ p["wo"].astype(cdt)
+    if "bo" in p:
+        y = y + p["bo"].astype(cdt)
+
+    # --- default placement: adapter on the attention block output ---
+    if adapter is not None and acfg.kind == "hadamard" and acfg.position == "attn_out":
+        y = apply_hadamard(y, adapter)
+
+    return y, new_cache

@@ -1,0 +1,142 @@
+"""Shared neural-net building blocks (pure functional init/apply pairs)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.types import ModelCfg
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: Optional[float] = None):
+    scale = 0.02 if scale is None else scale
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (d_in, d_out)) * scale).astype(
+        dtype
+    )
+
+
+def embed_init(key, n: int, d: int, dtype, scale: float = 0.02):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (n, d)) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Normalisation
+# ---------------------------------------------------------------------------
+
+
+def norm_init(cfg: ModelCfg, d: Optional[int] = None):
+    d = d or cfg.d_model
+    p = {"scale": jnp.ones((d,), cfg.pdtype)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), cfg.pdtype)
+    return p
+
+
+def apply_norm(p, cfg: ModelCfg, x):
+    """RMSNorm or LayerNorm, computed in fp32 for stability."""
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(x32, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(x32 - mu), axis=-1, keepdims=True)
+        y = (x32 - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        ms = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+        y = x32 * jax.lax.rsqrt(ms + cfg.norm_eps)
+        # gemma-style (1 + scale) parameterisation is not used; plain scale.
+        y = y * p["scale"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+def rms_head_norm(scale, x, eps=1e-6):
+    """Per-head RMSNorm over the trailing head_dim (qwen3 qk-norm)."""
+    x32 = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activations / MLP
+# ---------------------------------------------------------------------------
+
+
+def act_fn(name: str):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+        "relu": jax.nn.relu,
+        "relu2": lambda x: jnp.square(jax.nn.relu(x)),
+    }[name]
+
+
+def mlp_init(key, cfg: ModelCfg, d_in: Optional[int] = None, d_ff: Optional[int] = None):
+    d_in = d_in or cfg.d_model
+    d_ff = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "wi": dense_init(k1, d_in, d_ff, cfg.pdtype),
+        "wo": dense_init(k2, d_ff, d_in, cfg.pdtype),
+    }
+    if cfg.gated_mlp:
+        p["wg"] = dense_init(k3, d_in, d_ff, cfg.pdtype)
+    if cfg.mlp_bias:
+        p["bi"] = jnp.zeros((d_ff,), cfg.pdtype)
+        p["bo"] = jnp.zeros((d_in,), cfg.pdtype)
+    return p
+
+
+def apply_mlp(p, cfg: ModelCfg, x, ia3=None):
+    h = x @ p["wi"].astype(cfg.cdtype)
+    if "bi" in p:
+        h = h + p["bi"].astype(cfg.cdtype)
+    if cfg.gated_mlp:
+        h = act_fn(cfg.act)(h) * (x @ p["wg"].astype(cfg.cdtype))
+    else:
+        h = act_fn(cfg.act)(h)
+    if ia3 is not None:  # IA3 baseline: learned scale on the ffn activation
+        h = h * ia3.astype(cfg.cdtype)
+    y = h @ p["wo"].astype(cfg.cdtype)
+    if "bo" in p:
+        y = y + p["bo"].astype(cfg.cdtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float):
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta**exponent)  # (head_dim/2,)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., seq, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Softcap (gemma2)
+# ---------------------------------------------------------------------------
+
+
+def softcap(x, cap: float):
+    if not cap:
+        return x
+    return jnp.tanh(x / cap) * cap

@@ -1,0 +1,262 @@
+"""Top-level model families built on the layer program.
+
+Families:
+  decoder  - causal LM (starcoder2, qwen3, gemma2, deepseek/qwen3 MoE,
+             rwkv6, recurrentgemma)
+  encoder  - BERT/RoBERTa-style classifier (the paper's PLMs): learned
+             positions, segment embeddings, post-LN, pooler + classifier
+  encdec   - Whisper backbone: audio-frame-embedding encoder (conv frontend
+             stubbed per task spec) + causal decoder w/ cross-attention
+  vlm      - InternVL backbone: precomputed patch embeddings (ViT stubbed)
+             prepended to the token sequence of a decoder LM
+
+All functions are pure: (params, cfg, inputs) -> outputs.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.types import ModelCfg
+from repro.dist.api import constrain
+from repro.models.layers import apply_norm, dense_init, embed_init, norm_init, softcap
+from repro.models.program import group_apply, group_cache_init, group_init
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg: ModelCfg):
+    ks = jax.random.split(key, 16)
+    p = {"embed": {"table": embed_init(ks[0], cfg.vocab_size, cfg.d_model, cfg.pdtype)}}
+
+    if cfg.pos == "learned":
+        p["pos_embed"] = {"table": embed_init(ks[1], cfg.max_seq_len, cfg.d_model, cfg.pdtype)}
+    if cfg.n_segment_types:
+        p["type_embed"] = {"table": embed_init(ks[2], cfg.n_segment_types, cfg.d_model, cfg.pdtype)}
+        p["embed_norm"] = norm_init(cfg)
+
+    p["blocks"] = {
+        f"g{i}": group_init(jax.random.fold_in(ks[3], i), cfg, g)
+        for i, g in enumerate(cfg.groups)
+    }
+    p["final_norm"] = norm_init(cfg)
+
+    if cfg.enc_groups:
+        p["enc_blocks"] = {
+            f"g{i}": group_init(jax.random.fold_in(ks[4], i), cfg, g)
+            for i, g in enumerate(cfg.enc_groups)
+        }
+        p["enc_final_norm"] = norm_init(cfg)
+        p["enc_pos_embed"] = {
+            "table": embed_init(ks[5], cfg.n_audio_frames, cfg.d_model, cfg.pdtype)
+        }
+
+    if cfg.family == "vlm":
+        p["vlm_proj"] = {"kernel": dense_init(ks[6], cfg.d_model, cfg.d_model, cfg.pdtype)}
+
+    if cfg.family == "encoder":
+        p["pooler"] = {
+            "kernel": dense_init(ks[7], cfg.d_model, cfg.d_model, cfg.pdtype),
+            "bias": jnp.zeros((cfg.d_model,), cfg.pdtype),
+        }
+        p["classifier"] = {
+            "kernel": dense_init(ks[8], cfg.d_model, cfg.n_classes, jnp.float32),
+            "bias": jnp.zeros((cfg.n_classes,), jnp.float32),
+        }
+    elif not cfg.tie_embeddings:
+        p["lm_head"] = {"kernel": dense_init(ks[9], cfg.d_model, cfg.vocab_size, cfg.pdtype)}
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+
+def embed_tokens(params, cfg: ModelCfg, tokens, positions=None, type_ids=None):
+    x = jnp.take(params["embed"]["table"], tokens, axis=0).astype(cfg.cdtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model**0.5, cfg.cdtype)
+    if cfg.pos == "learned" and positions is not None:
+        x = x + jnp.take(params["pos_embed"]["table"], positions, axis=0).astype(cfg.cdtype)
+    if cfg.n_segment_types and type_ids is not None:
+        x = x + jnp.take(params["type_embed"]["table"], type_ids, axis=0).astype(cfg.cdtype)
+    if "embed_norm" in params:
+        x = apply_norm(params["embed_norm"], cfg, x)
+    return x
+
+
+def lm_logits(params, cfg: ModelCfg, h):
+    if cfg.tie_embeddings:
+        logits = h @ params["embed"]["table"].astype(cfg.cdtype).T
+    else:
+        logits = h @ params["lm_head"]["kernel"].astype(cfg.cdtype)
+    logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    return constrain(logits, "dp", None, "model")
+
+
+# ---------------------------------------------------------------------------
+# Backbone driver
+# ---------------------------------------------------------------------------
+
+
+def _run_groups(params, cfg: ModelCfg, groups, blocks_key, x, *, q_pos, causal,
+                mode="train", caches=None, cache_len=None, write_pos=None,
+                enc_out=None):
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = {}
+    for i, g in enumerate(groups):
+        x, nc, aux = group_apply(
+            params[blocks_key][f"g{i}"], cfg, g, x,
+            q_pos=q_pos, causal=causal, mode=mode,
+            caches=(caches or {}).get(f"g{i}"), cache_len=cache_len,
+            write_pos=write_pos, enc_out=enc_out,
+        )
+        if nc is not None:
+            new_caches[f"g{i}"] = nc
+        aux_total = aux_total + aux
+    return x, (new_caches or None), aux_total
+
+
+# ---------------------------------------------------------------------------
+# decoder / vlm family
+# ---------------------------------------------------------------------------
+
+
+def _decoder_embed(params, cfg: ModelCfg, tokens, patches=None):
+    S_txt = tokens.shape[1]
+    pos_txt = jnp.arange(S_txt)
+    if cfg.family == "vlm" and patches is not None:
+        img = (patches.astype(cfg.cdtype) @ params["vlm_proj"]["kernel"].astype(cfg.cdtype))
+        txt = embed_tokens(params, cfg, tokens, positions=pos_txt)
+        x = jnp.concatenate([img, txt], axis=1)
+    else:
+        x = embed_tokens(params, cfg, tokens, positions=pos_txt)
+    return constrain(x, "dp", None, None)
+
+
+def forward_hidden(params, cfg: ModelCfg, tokens, patches=None):
+    """Final-norm hidden states (training); logits left to the caller so
+    the loss can compute them in sequence chunks (cfg.ce_chunk)."""
+    x = _decoder_embed(params, cfg, tokens, patches)
+    q_pos = jnp.arange(x.shape[1])
+    x, _, aux = _run_groups(params, cfg, cfg.groups, "blocks", x,
+                            q_pos=q_pos, causal=True, mode="train")
+    return apply_norm(params["final_norm"], cfg, x), aux
+
+
+def forward_lm(params, cfg: ModelCfg, tokens, patches=None):
+    """Teacher-forced full-sequence logits (training)."""
+    x, aux = forward_hidden(params, cfg, tokens, patches)
+    return lm_logits(params, cfg, x), aux
+
+
+def prefill_lm(params, cfg: ModelCfg, tokens, cache_len: int, patches=None):
+    x = _decoder_embed(params, cfg, tokens, patches)
+    q_pos = jnp.arange(x.shape[1])
+    x, caches, _ = _run_groups(params, cfg, cfg.groups, "blocks", x,
+                               q_pos=q_pos, causal=True, mode="prefill",
+                               cache_len=cache_len)
+    x = apply_norm(params["final_norm"], cfg, x[:, -1:])
+    return lm_logits(params, cfg, x), caches
+
+
+def decode_lm(params, cfg: ModelCfg, caches, token, pos):
+    """One decode step. token: (B, 1) int32; pos: scalar int32."""
+    x = embed_tokens(params, cfg, token)
+    q_pos = jnp.full((1,), pos, jnp.int32)
+    x, caches, _ = _run_groups(params, cfg, cfg.groups, "blocks", x,
+                               q_pos=q_pos, causal=True, mode="decode",
+                               caches=caches, write_pos=pos)
+    x = apply_norm(params["final_norm"], cfg, x)
+    return lm_logits(params, cfg, x), caches
+
+
+def init_decode_caches(cfg: ModelCfg, batch: int, cache_len: int):
+    return {
+        f"g{i}": group_cache_init(cfg, g, batch, cache_len)
+        for i, g in enumerate(cfg.groups)
+    }
+
+
+# ---------------------------------------------------------------------------
+# encoder (BERT/RoBERTa) family
+# ---------------------------------------------------------------------------
+
+
+def forward_encoder(params, cfg: ModelCfg, tokens, type_ids=None):
+    """Returns (cls_logits, pooled, sequence_h)."""
+    B, S = tokens.shape
+    pos = jnp.arange(S)
+    x = embed_tokens(params, cfg, tokens, positions=pos, type_ids=type_ids)
+    x = constrain(x, "dp", None, None)
+    x, _, _ = _run_groups(params, cfg, cfg.groups, "blocks", x,
+                          q_pos=pos, causal=False, mode="train")
+    pooled = jnp.tanh(
+        x[:, 0] @ params["pooler"]["kernel"].astype(cfg.cdtype)
+        + params["pooler"]["bias"].astype(cfg.cdtype)
+    )
+    logits = (pooled.astype(jnp.float32) @ params["classifier"]["kernel"]
+              + params["classifier"]["bias"])
+    return logits, pooled, x
+
+
+# ---------------------------------------------------------------------------
+# encdec (Whisper backbone) family
+# ---------------------------------------------------------------------------
+
+
+def encode_audio(params, cfg: ModelCfg, frames):
+    """frames: (B, n_frames, d) precomputed conv-frontend embeddings (stub)."""
+    S = frames.shape[1]
+    pos = jnp.arange(S)
+    x = frames.astype(cfg.cdtype) + jnp.take(
+        params["enc_pos_embed"]["table"], pos, axis=0).astype(cfg.cdtype)
+    x, _, _ = _run_groups(params, cfg, cfg.enc_groups, "enc_blocks", x,
+                          q_pos=pos, causal=False, mode="train")
+    return apply_norm(params["enc_final_norm"], cfg, x)
+
+
+def forward_encdec(params, cfg: ModelCfg, frames, tokens):
+    enc = encode_audio(params, cfg, frames)
+    S = tokens.shape[1]
+    pos = jnp.arange(S)
+    x = embed_tokens(params, cfg, tokens, positions=pos)
+    x, _, aux = _run_groups(params, cfg, cfg.groups, "blocks", x,
+                            q_pos=pos, causal=True, mode="train", enc_out=enc)
+    x = apply_norm(params["final_norm"], cfg, x)
+    return lm_logits(params, cfg, x), aux
+
+
+def prefill_encdec(params, cfg: ModelCfg, frames, tokens, cache_len: int):
+    enc = encode_audio(params, cfg, frames)
+    S = tokens.shape[1]
+    pos = jnp.arange(S)
+    x = embed_tokens(params, cfg, tokens, positions=pos)
+    x, caches, _ = _run_groups(params, cfg, cfg.groups, "blocks", x,
+                               q_pos=pos, causal=True, mode="prefill",
+                               cache_len=cache_len, enc_out=enc)
+    x = apply_norm(params["final_norm"], cfg, x[:, -1:])
+    return lm_logits(params, cfg, x), caches
+
+
+def decode_encdec(params, cfg: ModelCfg, caches, token, pos):
+    x = embed_tokens(params, cfg, token, positions=jnp.full((1,), pos))
+    q_pos = jnp.full((1,), pos, jnp.int32)
+    x, caches, _ = _run_groups(params, cfg, cfg.groups, "blocks", x,
+                               q_pos=q_pos, causal=True, mode="decode",
+                               caches=caches, write_pos=pos)
+    x = apply_norm(params["final_norm"], cfg, x)
+    return lm_logits(params, cfg, x), caches
+
+
+def init_encdec_caches(cfg: ModelCfg, batch: int, cache_len: int):
+    return {
+        f"g{i}": group_cache_init(cfg, g, batch, cache_len,
+                                  enc_len=cfg.n_audio_frames)
+        for i, g in enumerate(cfg.groups)
+    }

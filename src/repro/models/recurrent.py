@@ -1,0 +1,104 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Structure per block (temporal-mixing half):
+  x -> linear_x -> causal depthwise conv1d -> RG-LRU -> (*) -> linear_out
+  x -> linear_y -> GeLU ------------------------------^
+
+RG-LRU: r_t = sigmoid(W_a xc_t), i_t = sigmoid(W_x xc_t)
+        log a_t = -c * softplus(L) * r_t           (c = 8)
+        h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * xc_t)
+
+Training/prefill uses `jax.lax.associative_scan` (parallel prefix, TPU
+friendly, and fully visible to HLO cost analysis - no while loop).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.types import ModelCfg
+from repro.models.layers import dense_init
+
+_C = 8.0
+
+
+def rec_init(key, cfg: ModelCfg):
+    d = cfg.d_model
+    W = cfg.lru_width or d
+    cw = cfg.conv1d_width
+    ks = jax.random.split(key, 7)
+    # init a so that a^c lands in ~[0.9, 0.999] at r=1 (paper appendix)
+    u = jax.random.uniform(ks[0], (W,), jnp.float32, 0.9**2, 0.999**2)
+    a_param = jnp.log(jnp.exp(-jnp.log(u) / (2 * _C)) - 1.0)  # softplus^-1
+    return {
+        "in_x": dense_init(ks[1], d, W, cfg.pdtype),
+        "in_y": dense_init(ks[2], d, W, cfg.pdtype),
+        "conv_w": (jax.random.normal(ks[3], (cw, W)) * 0.02).astype(cfg.pdtype),
+        "conv_b": jnp.zeros((W,), cfg.pdtype),
+        "a_param": a_param.astype(jnp.float32),
+        "gate_a": dense_init(ks[4], W, W, cfg.pdtype),
+        "gate_x": dense_init(ks[5], W, W, cfg.pdtype),
+        "gate_a_b": jnp.zeros((W,), cfg.pdtype),
+        "gate_x_b": jnp.zeros((W,), cfg.pdtype),
+        "out": dense_init(ks[6], W, d, cfg.pdtype),
+    }
+
+
+def rec_cache_init(cfg: ModelCfg, batch: int, dtype=None):
+    W = cfg.lru_width or cfg.d_model
+    dtype = dtype or cfg.cdtype
+    return {
+        "h": jnp.zeros((batch, W), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv1d_width - 1, W), dtype),
+    }
+
+
+def _causal_conv(p, x, conv_state):
+    """Depthwise causal conv, width cw. x: (B,S,W); state: (B,cw-1,W)."""
+    cw = p["conv_w"].shape[0]
+    full = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    S = x.shape[1]
+    y = jnp.zeros_like(x)
+    for i in range(cw):
+        # tap i looks back (cw-1-i) steps
+        y = y + full[:, i : i + S] * p["conv_w"][i].astype(x.dtype)
+    y = y + p["conv_b"].astype(x.dtype)
+    new_state = full[:, -(cw - 1):] if cw > 1 else conv_state
+    return y, new_state
+
+
+def _rg_lru(p, xc, h0):
+    """xc: (B,S,W) fp32 conv output; h0: (B,W) fp32. Returns (y, h_last)."""
+    r = jax.nn.sigmoid(xc @ p["gate_a"].astype(jnp.float32) + p["gate_a_b"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xc @ p["gate_x"].astype(jnp.float32) + p["gate_x_b"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["a_param"]) * r  # (B,S,W)
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = beta * (i * xc)
+
+    if xc.shape[1] == 1:
+        h = a[:, 0] * h0 + b[:, 0]
+        return h[:, None], h
+
+    def combine(lhs, rhs):
+        al, bl = lhs
+        ar, br = rhs
+        return (al * ar, bl * ar + br)
+
+    A, Bc = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h_seq = Bc + A * h0[:, None, :]
+    return h_seq, h_seq[:, -1]
+
+
+def rec_apply(p, cfg: ModelCfg, x, cache=None):
+    """Temporal-mixing block. x: (B,S,d). Returns (y, new_cache)."""
+    cdt = cfg.cdtype
+    gx = x @ p["in_x"].astype(cdt)
+    gy = jax.nn.gelu(x @ p["in_y"].astype(cdt), approximate=True)
+
+    state = cache if cache is not None else rec_cache_init(cfg, x.shape[0], cdt)
+    xc, new_conv = _causal_conv(p, gx, state["conv"])
+    h_seq, h_last = _rg_lru(p, xc.astype(jnp.float32), state["h"])
+
+    y = (h_seq.astype(cdt) * gy) @ p["out"].astype(cdt)
+    return y, {"h": h_last, "conv": new_conv}

@@ -1,0 +1,174 @@
+"""RWKV6 "Finch" (arXiv:2404.05892): attention-free token mixing with
+data-dependent per-channel decay, plus the squared-ReLU channel mix.
+
+Time-mixing recurrence (per head, head_dim n, matrix state S in R^{n x n}):
+    o_t = r_t . (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+with w_t = exp(-exp(w0 + lora_w(x_w,t)))  (data-dependent decay in (0,1)),
+and the token-shift "ddlerp" low-rank interpolation producing per-channel
+mixes for (w, k, v, r, g).
+
+The sequential scan is the reference path; the Pallas kernel
+(`repro.kernels.rwkv6`) implements the chunked form for TPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.costmode import scan_unroll
+from repro.common.types import ModelCfg
+from repro.models.layers import dense_init
+
+_DDLERP_RANK = 32
+_DECAY_RANK = 64
+_MIX_NAMES = 5  # w, k, v, r, g
+
+
+def rwkv_tm_init(key, cfg: ModelCfg):
+    d = cfg.d_model
+    n = cfg.rwkv_head_dim
+    H = d // n
+    ks = jax.random.split(key, 12)
+    return {
+        "mu_x": (jax.random.uniform(ks[0], (d,)) * 0.5).astype(jnp.float32),
+        "mu": (jax.random.uniform(ks[1], (_MIX_NAMES, d)) * 0.5).astype(jnp.float32),
+        "lora1": dense_init(ks[2], d, _MIX_NAMES * _DDLERP_RANK, cfg.pdtype),
+        "lora2": (jax.random.normal(ks[3], (_MIX_NAMES, _DDLERP_RANK, d)) * 0.01).astype(cfg.pdtype),
+        "w0": (jax.random.normal(ks[4], (d,)) * 0.5 - 0.6).astype(jnp.float32),
+        "wA": dense_init(ks[5], d, _DECAY_RANK, cfg.pdtype),
+        "wB": (jax.random.normal(ks[6], (_DECAY_RANK, d)) * 0.01).astype(cfg.pdtype),
+        "u": (jax.random.normal(ks[7], (H, n)) * 0.1).astype(jnp.float32),
+        "wr": dense_init(ks[8], d, d, cfg.pdtype),
+        "wk": dense_init(ks[9], d, d, cfg.pdtype),
+        "wv": dense_init(ks[10], d, d, cfg.pdtype),
+        "wg": dense_init(ks[11], d, d, cfg.pdtype),
+        "wo": dense_init(jax.random.fold_in(key, 99), d, d, cfg.pdtype),
+        "ln_x_scale": jnp.ones((d,), cfg.pdtype),
+        "ln_x_bias": jnp.zeros((d,), cfg.pdtype),
+    }
+
+
+def rwkv_cm_init(key, cfg: ModelCfg):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": (jax.random.uniform(ks[0], (d,)) * 0.5).astype(jnp.float32),
+        "mu_r": (jax.random.uniform(jax.random.fold_in(key, 1), (d,)) * 0.5).astype(jnp.float32),
+        "ck": dense_init(ks[1], d, f, cfg.pdtype),
+        "cv": dense_init(ks[2], f, d, cfg.pdtype),
+        "cr": dense_init(jax.random.fold_in(key, 2), d, d, cfg.pdtype),
+    }
+
+
+def rwkv_cache_init(cfg: ModelCfg, batch: int, dtype=None):
+    d = cfg.d_model
+    n = cfg.rwkv_head_dim
+    H = d // n
+    dtype = dtype or cfg.cdtype
+    return {
+        "S": jnp.zeros((batch, H, n, n), jnp.float32),
+        "tm_prev": jnp.zeros((batch, d), dtype),
+        "cm_prev": jnp.zeros((batch, d), dtype),
+    }
+
+
+def _shift(x, prev):
+    """Token shift: x_{t-1}, with `prev` providing position -1."""
+    return jnp.concatenate([prev[:, None].astype(x.dtype), x[:, :-1]], axis=1)
+
+
+def _group_norm(p, x, n: int, eps=1e-5):
+    """Per-head LayerNorm on (B,S,d) reshaped to heads of size n."""
+    B, S, d = x.shape
+    xh = x.reshape(B, S, d // n, n).astype(jnp.float32)
+    mu = xh.mean(-1, keepdims=True)
+    var = jnp.square(xh - mu).mean(-1, keepdims=True)
+    y = ((xh - mu) * jax.lax.rsqrt(var + eps)).reshape(B, S, d)
+    return y * p["ln_x_scale"].astype(jnp.float32) + p["ln_x_bias"].astype(jnp.float32)
+
+
+def rwkv_time_mix(p, cfg: ModelCfg, x, cache=None):
+    """x: (B,S,d). Returns (y, new_cache_parts)."""
+    B, S, d = x.shape
+    n = cfg.rwkv_head_dim
+    H = d // n
+    cdt = cfg.cdtype
+
+    state = cache if cache is not None else rwkv_cache_init(cfg, B, cdt)
+    shifted = _shift(x, state["tm_prev"])
+    xx = shifted - x
+
+    # ddlerp: data-dependent token-shift mix for the five streams
+    xxx = x + xx * p["mu_x"].astype(cdt)
+    s = jnp.tanh(xxx @ p["lora1"].astype(cdt)).reshape(B, S, _MIX_NAMES, _DDLERP_RANK)
+    offs = jnp.einsum("bsfr,frd->bsfd", s, p["lora2"].astype(cdt))
+    mix = p["mu"].astype(cdt)[None, None] + offs  # (B,S,5,d)
+    xw, xk, xv, xr, xg = [x + xx * mix[:, :, i] for i in range(_MIX_NAMES)]
+
+    # data-dependent decay, fp32
+    dec = p["w0"].astype(jnp.float32) + (
+        jnp.tanh(xw @ p["wA"].astype(cdt)) @ p["wB"].astype(cdt)
+    ).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(dec))  # (B,S,d) in (0,1)
+
+    r = (xr @ p["wr"].astype(cdt)).reshape(B, S, H, n).astype(jnp.float32)
+    k = (xk @ p["wk"].astype(cdt)).reshape(B, S, H, n).astype(jnp.float32)
+    v = (xv @ p["wv"].astype(cdt)).reshape(B, S, H, n).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p["wg"].astype(cdt))
+    wh = w.reshape(B, S, H, n)
+    u = p["u"].astype(jnp.float32)
+
+    if S == 1:
+        S0 = state["S"]
+        kv = k[:, 0, :, :, None] * v[:, 0, :, None, :]
+        o = jnp.einsum("bhi,bhij->bhj", r[:, 0], S0 + u[None, :, :, None] * kv)
+        S_new = wh[:, 0, :, :, None] * S0 + kv
+        o = o[:, None]
+    else:
+        # Chunked remat: the naive scan's VJP stores the (B,H,n,n) carry for
+        # every timestep (~34 GB at 4k x batch 16). Scanning over rematted
+        # chunks keeps only chunk-boundary states; the within-chunk carries
+        # are recomputed during backward. Matches the Pallas kernel tiling.
+        L = next(l for l in range(min(cfg.rwkv_chunk, S), 0, -1) if S % l == 0)
+        nc = S // L
+
+        def step(S0, xs):
+            r_t, k_t, v_t, w_t = xs
+            kv = k_t[:, :, :, None] * v_t[:, :, None, :]  # (B,H,n,n)
+            o_t = jnp.einsum("bhi,bhij->bhj", r_t, S0 + u[None, :, :, None] * kv)
+            S1 = w_t[:, :, :, None] * S0 + kv
+            return S1, o_t
+
+        def chunk_fn(S0, xs_chunk):
+            S1, o_c = jax.lax.scan(step, S0, xs_chunk, unroll=scan_unroll(L))
+            return S1, o_c
+
+        chunk_fn = jax.checkpoint(
+            chunk_fn, policy=jax.checkpoint_policies.nothing_saveable,
+            prevent_cse=False)
+        # (B,S,H,n) -> (nc, L, B, H, n)
+        xs = tuple(
+            jnp.moveaxis(t, 1, 0).reshape(nc, L, *t.shape[0:1], *t.shape[2:])
+            for t in (r, k, v, wh))
+        S_new, o = jax.lax.scan(chunk_fn, state["S"], xs,
+                                unroll=scan_unroll(nc))
+        o = jnp.moveaxis(o.reshape(S, B, H, n), 0, 1)  # (B,S,H,n)
+
+    o = o.reshape(B, S, d)
+    o = _group_norm(p, o, n).astype(cdt) * g
+    y = o @ p["wo"].astype(cdt)
+    return y, {"S": S_new, "tm_prev": x[:, -1]}
+
+
+def rwkv_channel_mix(p, cfg: ModelCfg, x, cache=None):
+    B, S, d = x.shape
+    cdt = cfg.cdtype
+    prev = cache["cm_prev"] if cache is not None else jnp.zeros((B, d), cdt)
+    shifted = _shift(x, prev)
+    xx = shifted - x
+    xk = x + xx * p["mu_k"].astype(cdt)
+    xr = x + xx * p["mu_r"].astype(cdt)
+    h = jnp.square(jax.nn.relu(xk @ p["ck"].astype(cdt)))
+    y = jax.nn.sigmoid(xr @ p["cr"].astype(cdt)) * (h @ p["cv"].astype(cdt))
+    return y, {"cm_prev": x[:, -1]}

@@ -1,0 +1,74 @@
+"""AdamW with decoupled weight decay, over *trainable-only* trees.
+
+State exists only for non-None leaves (the PEFT partition), in fp32.
+With the Hadamard strategy this is ~0.03 % of the model — the optimizer
+memory collapse that makes giant-model fine-tuning cheap.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import tree as tu
+from repro.common.types import OptimCfg
+
+
+def adamw_init(trainable):
+    def zeros(v):
+        return None if v is None else jnp.zeros(v.shape, jnp.float32)
+
+    return {
+        "m": jax.tree.map(zeros, trainable, is_leaf=lambda v: v is None),
+        "v": jax.tree.map(zeros, trainable, is_leaf=lambda v: v is None),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = tu.global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return tu.tree_scale(grads, scale), norm
+
+
+def adamw_update(grads, state, params, cfg: OptimCfg, lr):
+    """Returns (new_params, new_state). All trees may contain None leaves."""
+    count = state["count"] + 1
+    c1 = 1.0 - cfg.b1**count.astype(jnp.float32)
+    c2 = 1.0 - cfg.b2**count.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        if g is None or p is None:
+            return None, None, p
+        g32 = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g32
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g32)
+        mhat = m / c1
+        vhat = v / c2
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        p32 = p.astype(jnp.float32)
+        if cfg.weight_decay and p.ndim >= 2:  # decay matrices, not vectors
+            step = step + cfg.weight_decay * p32
+        return m, v, (p32 - lr * step).astype(p.dtype)
+
+    is_none = lambda v: v is None
+    flat_g = jax.tree.leaves(grads, is_leaf=is_none)
+    flat_m = jax.tree.leaves(state["m"], is_leaf=is_none)
+    flat_v = jax.tree.leaves(state["v"], is_leaf=is_none)
+    flat_p = jax.tree.leaves(params, is_leaf=is_none)
+    treedef = jax.tree.structure(params, is_leaf=is_none)
+
+    new_m, new_v, new_p = [], [], []
+    for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p):
+        m2, v2, p2 = upd(g, m, v, p)
+        new_m.append(m2)
+        new_v.append(v2)
+        new_p.append(p2)
+
+    return (
+        jax.tree.unflatten(treedef, new_p),
+        {
+            "m": jax.tree.unflatten(treedef, new_m),
+            "v": jax.tree.unflatten(treedef, new_v),
+            "count": count,
+        },
+    )

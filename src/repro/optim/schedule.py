@@ -1,0 +1,25 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.common.types import OptimCfg
+
+
+def lr_at(cfg: OptimCfg, step):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    peak = cfg.lr
+    warm = max(cfg.warmup_steps, 1)
+    total = max(cfg.total_steps, warm + 1)
+    # (step+1)/warm: step 0 trains at peak/warm, not 0 (and at peak when
+    # warmup is disabled)
+    warm_lr = peak * jnp.minimum(1.0, (step + 1.0) / warm)
+    frac = jnp.clip((step - warm) / (total - warm), 0.0, 1.0)
+    floor = peak * cfg.min_lr_ratio
+    if cfg.schedule == "constant":
+        decayed = peak
+    elif cfg.schedule == "linear":
+        decayed = peak + (floor - peak) * frac
+    else:  # cosine
+        decayed = floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * frac))
+    return jnp.where(step < warm, warm_lr, decayed)

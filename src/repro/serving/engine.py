@@ -1,0 +1,90 @@
+"""Serving engine: batched prefill + greedy decode with KV caches, and
+multi-task Hadamard serving (one frozen backbone, per-request adapters).
+
+The multi-task path is the deployment story the paper's §5 analysis points
+at: adapters are 2*L*d floats per task, so a bank of hundreds of tasks is
+megabytes; requests carrying different task ids batch together and each
+token is transformed by its own (w, b) - the Hadamard analogue of
+multi-LoRA serving.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.types import ModelCfg
+from repro.core.hadamard import build_bank, fold_adapter, select_tasks
+from repro.models import model as M
+
+
+def sample_greedy(logits):
+    return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+
+
+def sample_topk(logits, rng, k: int = 40, temperature: float = 1.0):
+    lg = logits[:, -1] / max(temperature, 1e-6)
+    top, idx = jax.lax.top_k(lg, k)
+    choice = jax.random.categorical(rng, top)
+    return jnp.take_along_axis(idx, choice[:, None], axis=-1)[:, 0].astype(jnp.int32)
+
+
+class ServeEngine:
+    """Greedy/top-k generation over any decoder-family config."""
+
+    def __init__(self, cfg: ModelCfg, params, *, fold: bool = False):
+        if fold and cfg.adapter.kind == "hadamard":
+            params = fold_adapter(params, cfg)
+        self.cfg = cfg
+        self.params = params
+        self._prefill = jax.jit(
+            lambda p, toks, cl: M.prefill_lm(p, cfg, toks, cache_len=cl),
+            static_argnums=(2,),
+        )
+        self._decode = jax.jit(
+            lambda p, caches, tok, pos: M.decode_lm(p, cfg, caches, tok, pos),
+            donate_argnums=(1,),
+        )
+
+    def generate(self, tokens: np.ndarray, max_new_tokens: int,
+                 rng: Optional[jax.Array] = None, top_k: int = 0):
+        B, S = tokens.shape
+        cache_len = S + max_new_tokens
+        logits, caches = self._prefill(self.params, jnp.asarray(tokens), cache_len)
+        out = []
+        tok = sample_greedy(logits)
+        for i in range(max_new_tokens):
+            out.append(tok)
+            logits, caches = self._decode(
+                self.params, caches, tok[:, None], jnp.int32(S + i))
+            if top_k and rng is not None:
+                rng, sub = jax.random.split(rng)
+                tok = sample_topk(logits, sub, k=top_k)
+            else:
+                tok = sample_greedy(logits)
+        return np.stack([np.asarray(t) for t in out], axis=1)
+
+
+class MultiTaskEngine(ServeEngine):
+    """One frozen backbone + a bank of per-task Hadamard adapters.
+
+    `param_list` are per-task param trees sharing every non-adapter leaf.
+    Each generate() call takes per-request task ids; adapters are gathered
+    per request and broadcast over the sequence inside apply_hadamard.
+    """
+
+    def __init__(self, cfg: ModelCfg, param_list):
+        self.bank = build_bank(param_list)
+        super().__init__(cfg, self.bank, fold=False)
+
+    def generate_for_tasks(self, tokens: np.ndarray, task_ids: np.ndarray,
+                           max_new_tokens: int):
+        params = select_tasks(self.bank, jnp.asarray(task_ids))
+        saved = self.params
+        self.params = params
+        try:
+            return self.generate(tokens, max_new_tokens)
+        finally:
+            self.params = saved

@@ -1,0 +1,137 @@
+"""Train-step builder: PEFT partition, grad accumulation, compression,
+clipping, AdamW - one code path for every strategy and family.
+
+The state dict is a pure pytree (jit/donate friendly):
+  step:      int32 scalar
+  trainable: param subtree (None at frozen leaves)
+  frozen:    param subtree (None at trainable leaves)
+  opt:       AdamW moments over `trainable`
+  err:       error-feedback buffers (only when compression is on)
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import tree as tu
+from repro.common.costmode import scan_unroll
+from repro.common.types import ModelCfg, OptimCfg
+from repro.core import peft
+from repro.models import model as M
+from repro.optim.adamw import adamw_init, adamw_update, clip_by_global_norm
+from repro.optim.compression import compress, ef_init
+from repro.optim.schedule import lr_at
+from repro.train.losses import loss_for
+
+
+def make_state(key, cfg: ModelCfg, strat: peft.Strategy, ocfg: OptimCfg,
+               stage: int = 2, params=None):
+    if params is None:
+        params = M.init_params(key, cfg)
+    else:
+        # the train loop donates the state; copy so caller-owned params
+        # (e.g. a pretrained backbone reused across tasks) never get freed
+        params = jax.tree.map(jnp.array, params)
+    mask = peft.trainable_mask(params, strat, stage=stage)
+    trainable, frozen = tu.partition(params, mask)
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "trainable": trainable,
+        "frozen": frozen,
+        "opt": adamw_init(trainable),
+    }
+    if ocfg.compress_grads:
+        state["err"] = ef_init(trainable)
+    return state
+
+
+def merged_params(state):
+    return tu.merge(state["trainable"], state["frozen"])
+
+
+def build_train_step(cfg: ModelCfg, ocfg: OptimCfg, *, microbatch: int = 0,
+                     gate=None, loss_fn: Optional[Callable] = None):
+    """Returns step(state, batch) -> (state, metrics)."""
+    lf = loss_fn or loss_for(cfg)
+
+    def loss_wrt_trainable(trainable, frozen, batch):
+        params = tu.merge(trainable, frozen)
+        loss, metrics = lf(cfg, params, batch)
+        scalars = {k: v for k, v in metrics.items() if getattr(v, "ndim", 0) == 0}
+        return loss, scalars
+
+    def compute_grads(trainable, frozen, batch):
+        if not microbatch:
+            return jax.value_and_grad(loss_wrt_trainable, has_aux=True)(
+                trainable, frozen, batch)
+
+        n = microbatch
+        split = jax.tree.map(
+            lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), batch)
+
+        def body(carry, mb):
+            acc_g, acc_l = carry
+            (l, mets), g = jax.value_and_grad(loss_wrt_trainable, has_aux=True)(
+                trainable, frozen, mb)
+            return (tu.tree_add(acc_g, g), acc_l + l), mets
+
+        zero = tu.zeros_like_tree(trainable, jnp.float32)
+        (g, l), mets = jax.lax.scan(body, (zero, jnp.zeros(())), split,
+                                    unroll=scan_unroll(n))
+        g = tu.tree_scale(g, 1.0 / n)
+        mets = jax.tree.map(lambda m: m.mean(), mets)
+        return (l / n, mets), g
+
+    def step(state, batch):
+        (loss, metrics), grads = compute_grads(
+            state["trainable"], state["frozen"], batch)
+
+        if gate is not None:  # paper Table 5: per-layer unfreeze gating
+            grads = jax.tree.map(
+                lambda g, m: None if g is None else g * m, grads, gate,
+                is_leaf=lambda v: v is None)
+
+        new_err = None
+        if "err" in state:
+            grads, new_err = compress(grads, state["err"])
+
+        if ocfg.grad_clip:
+            grads, gnorm = clip_by_global_norm(grads, ocfg.grad_clip)
+        else:
+            gnorm = tu.global_norm(grads)
+
+        lr = lr_at(ocfg, state["step"])
+        new_trainable, new_opt = adamw_update(
+            grads, state["opt"], state["trainable"], ocfg, lr)
+
+        new_state = {
+            "step": state["step"] + 1,
+            "trainable": new_trainable,
+            "frozen": state["frozen"],
+            "opt": new_opt,
+        }
+        if new_err is not None:
+            new_state["err"] = new_err
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm, lr=lr)
+        return new_state, metrics
+
+    return step
+
+
+def build_eval_step(cfg: ModelCfg):
+    """Returns eval(params, batch) -> predictions for host-side metrics."""
+
+    def eval_step(params, batch):
+        if cfg.family == "encoder":
+            logits, _, _ = M.forward_encoder(params, cfg, batch["tokens"],
+                                             batch.get("type_ids"))
+            if cfg.is_regression:
+                return logits[..., 0].astype(jnp.float32)
+            return jnp.argmax(logits, axis=-1)
+        logits, _ = M.forward_lm(params, cfg, batch["tokens"],
+                                 patches=batch.get("patches"))
+        return jnp.argmax(logits, axis=-1)
+
+    return eval_step

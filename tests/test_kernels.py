@@ -1,0 +1,218 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracles,
+swept over shapes and dtypes, plus hypothesis property tests.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(42)
+
+
+def _rand(shape, dtype=jnp.float32, k=0):
+    return jax.random.normal(jax.random.fold_in(KEY, k), shape).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# hadamard affine
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [(3, 7, 32), (1, 1, 8), (2, 129, 256), (64, 96)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_hadamard_matches_ref(shape, dtype):
+    d = shape[-1]
+    x = _rand(shape, dtype, 1)
+    w = 1.0 + 0.1 * _rand((d,), jnp.float32, 2)
+    b = 0.1 * _rand((d,), jnp.float32, 3)
+    got = ops.hadamard(x, w, b, impl="interpret")
+    want = ref.hadamard_ref(x.astype(jnp.float32), w, b)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(want),
+                               atol=tol, rtol=tol)
+
+
+def test_hadamard_vjp_matches_ref():
+    x = _rand((4, 33, 96), k=4)
+    w = 1.0 + 0.1 * _rand((96,), k=5)
+    b = 0.1 * _rand((96,), k=6)
+
+    def f_pl(x, w, b):
+        return jnp.sum(jnp.sin(ops.hadamard(x, w, b, impl="interpret")))
+
+    def f_ref(x, w, b):
+        return jnp.sum(jnp.sin(ref.hadamard_ref(x, w, b)))
+
+    g_pl = jax.grad(f_pl, argnums=(0, 1, 2))(x, w, b)
+    g_ref = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, e in zip(g_pl, g_ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(e), atol=1e-4)
+
+
+def test_identity_init_is_noop():
+    """Paper §3.1: w=1, b=0 is equivalent to no adapter."""
+    x = _rand((2, 16, 64), k=7)
+    y = ops.hadamard(x, jnp.ones(64), jnp.zeros(64), impl="interpret")
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(rows=st.integers(1, 40), d=st.sampled_from([8, 32, 128]),
+       seed=st.integers(0, 2**16))
+def test_hadamard_property(rows, d, seed):
+    k = jax.random.PRNGKey(seed)
+    x = jax.random.normal(k, (rows, d))
+    w = jax.random.normal(jax.random.fold_in(k, 1), (d,))
+    b = jax.random.normal(jax.random.fold_in(k, 2), (d,))
+    got = ops.hadamard(x, w, b, impl="interpret")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x * w + b), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused adapter + residual + norm
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("layernorm", [False, True])
+@pytest.mark.parametrize("shape", [(2, 17, 64), (5, 128)])
+def test_fused_adapter_norm(shape, layernorm):
+    d = shape[-1]
+    x, res = _rand(shape, k=8), _rand(shape, k=9)
+    w = 1.0 + 0.1 * _rand((d,), k=10)
+    b = 0.1 * _rand((d,), k=11)
+    scale = 1.0 + 0.1 * _rand((d,), k=12)
+    bias = 0.1 * _rand((d,), k=13) if layernorm else None
+    got = ops.fused_adapter_norm(x, res, w, b, scale, bias=bias, impl="interpret")
+    want = ref.fused_adapter_residual_norm_ref(x, res, w, b, scale, bias=bias)
+    for g, wnt in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(wnt), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("gqa", [1, 4])
+@pytest.mark.parametrize("kwargs", [
+    dict(causal=True), dict(causal=False), dict(causal=True, window=16),
+    dict(causal=True, cap=30.0),
+])
+def test_flash_attention_matches_dense(gqa, kwargs):
+    B, KH, S, D = 2, 2, 48, 16
+    H = KH * gqa
+    q = _rand((B, H, S, D), k=14)
+    k = _rand((B, KH, S, D), k=15)
+    v = _rand((B, KH, S, D), k=16)
+    got = ops.flash_attention(q, k, v, impl="interpret", block_q=16,
+                              block_k=16, **kwargs)
+    want = ops.flash_attention(q, k, v, impl="jnp", **kwargs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(s=st.sampled_from([8, 24, 40]), d=st.sampled_from([8, 16]),
+       causal=st.booleans(), seed=st.integers(0, 999))
+def test_flash_attention_property(s, d, causal, seed):
+    k0 = jax.random.PRNGKey(seed)
+    q = jax.random.normal(k0, (1, 2, s, d))
+    k = jax.random.normal(jax.random.fold_in(k0, 1), (1, 2, s, d))
+    v = jax.random.normal(jax.random.fold_in(k0, 2), (1, 2, s, d))
+    got = ops.flash_attention(q, k, v, causal=causal, impl="interpret",
+                              block_q=8, block_k=8)
+    want = ops.flash_attention(q, k, v, causal=causal, impl="jnp")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-4)
+
+
+def test_flash_attention_rows_sum_to_one():
+    """Softmax invariant: with v = ones, output must be exactly ones."""
+    B, H, S, D = 1, 2, 32, 8
+    q = _rand((B, H, S, D), k=17)
+    k = _rand((B, H, S, D), k=18)
+    v = jnp.ones((B, H, S, D))
+    got = ops.flash_attention(q, k, v, causal=True, impl="interpret",
+                              block_q=8, block_k=8)
+    np.testing.assert_allclose(np.asarray(got), 1.0, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# wkv6
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("T,chunk", [(32, 8), (33, 16), (16, 64)])
+def test_wkv6_matches_ref(T, chunk):
+    B, H, n = 2, 3, 8
+    r = _rand((B, H, T, n), k=19)
+    k = _rand((B, H, T, n), k=20)
+    v = _rand((B, H, T, n), k=21)
+    w = jax.nn.sigmoid(_rand((B, H, T, n), k=22)) * 0.5 + 0.45
+    u = 0.1 * _rand((H, n), k=23)
+    got = ops.wkv6(r, k, v, w, u, impl="interpret", chunk=chunk)
+    want = ops.wkv6(r, k, v, w, u, impl="jnp")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+def test_wkv6_decay_property():
+    """With w=0, S_t = k_t v_t^T exactly, so the output at step t is the
+    bonus term plus attention to ONLY the previous token:
+      o_t = r_t @ (k_{t-1} v_{t-1}^T) + (r_t . (u*k_t)) v_t."""
+    B, H, T, n = 1, 1, 8, 4
+    r = _rand((B, H, T, n), k=24)
+    k = _rand((B, H, T, n), k=25)
+    v = _rand((B, H, T, n), k=26)
+    w = jnp.zeros((B, H, T, n))
+    u = 0.5 * jnp.ones((H, n))
+    got = ops.wkv6(r, k, v, w, u, impl="interpret", chunk=4)
+    rn, kn, vn, un = (np.asarray(t, np.float64) for t in (r, k, v, u))
+    want = np.zeros((B, H, T, n))
+    for t in range(T):
+        S = np.outer(kn[0, 0, t - 1], vn[0, 0, t - 1]) if t > 0 else np.zeros((n, n))
+        want[0, 0, t] = rn[0, 0, t] @ S + np.sum(
+            rn[0, 0, t] * un[0] * kn[0, 0, t]) * vn[0, 0, t]
+    np.testing.assert_allclose(np.asarray(got), want, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# multitask hadamard
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,S,d,T", [(4, 10, 32, 3), (1, 1, 8, 1), (8, 5, 64, 8)])
+def test_multitask_hadamard(B, S, d, T):
+    x = _rand((B, S, d), k=27)
+    wb = _rand((T, d), k=28)
+    bb = _rand((T, d), k=29)
+    tids = jax.random.randint(jax.random.fold_in(KEY, 30), (B,), 0, T)
+    got = ops.multitask_hadamard(x, wb, bb, tids, impl="interpret")
+    want = ref.multitask_hadamard_ref(x, wb, bb, tids)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# windowed band slicing (flash fast path)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("window", [8, 16, 48])
+def test_flash_window_band_matches_oracle(window):
+    """The O(S*window) banded path (dynamic_slice per q chunk) must match
+    the dense oracle exactly for every window size."""
+    from repro.models import flash
+
+    B, H, KH, S, D = 2, 4, 2, 64, 16
+    k0 = jax.random.PRNGKey(3)
+    q = jax.random.normal(k0, (B, H, S, D))
+    k = jax.random.normal(jax.random.fold_in(k0, 1), (B, KH, S, D))
+    v = jax.random.normal(jax.random.fold_in(k0, 2), (B, KH, S, D))
+    qg = q.transpose(0, 2, 1, 3).reshape(B, S, KH, H // KH, D)
+    out = flash.attend(qg, k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+                       q_pos=jnp.arange(S), kv_pos=jnp.arange(S),
+                       causal=True, window=window, q_chunk=8, kv_chunk=8)
+    out = out.reshape(B, S, H, D).transpose(0, 2, 1, 3)
+    want = ops.flash_attention(q, k, v, causal=True, window=window,
+                               impl="jnp")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=3e-4)

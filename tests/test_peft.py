@@ -1,0 +1,162 @@
+"""PEFT machinery: masks, param fractions (the paper's 0.033 % claim),
+partition/merge, folding, layer gating, two-stage recipe, pattern analysis.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_cfg
+from repro.common import tree as tu
+from repro.configs import get as get_cfg
+from repro.core import hadamard as H
+from repro.core import patterns, peft
+from repro.launch.specs import params_shapes
+from repro.models import model as M
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_partition_merge_roundtrip():
+    cfg = tiny_cfg()
+    p = M.init_params(KEY, cfg)
+    mask = peft.trainable_mask(p, peft.strategy("hadamard"))
+    a, b = tu.partition(p, mask)
+    merged = tu.merge(a, b)
+    for (pa, va), (pb, vb) in zip(tu.flatten_with_paths(p),
+                                  tu.flatten_with_paths(merged)):
+        assert pa == pb
+        np.testing.assert_array_equal(np.asarray(va), np.asarray(vb))
+
+
+def test_hadamard_trainable_selection():
+    cfg = peft.attach(tiny_cfg(), peft.strategy("hadamard"))
+    p = M.init_params(KEY, cfg)
+    mask = peft.trainable_mask(p, peft.strategy("hadamard"))
+    trainable = [pth for (pth, v), m in zip(tu.flatten_with_paths(p),
+                                            jax.tree.leaves(mask)) if m]
+    assert all(("adapter" in t) or ("ffn_norm" in t) for t in trainable)
+    assert any("adapter/w" in t for t in trainable)
+    assert any("ffn_norm" in t for t in trainable)
+
+
+def test_paper_param_fraction_bert_base():
+    """The paper's headline: 0.033 % trainable on BERT-base
+    (12 x 2 x 768 adapter + 12 x 2 x 768 ffn-LN = 36,864 of ~110M)."""
+    cfg = peft.attach(get_cfg("bert-base"), peft.strategy("hadamard"))
+    shapes = params_shapes(cfg)
+    mask = peft.trainable_mask(shapes, peft.strategy("hadamard"))
+    stats = peft.param_stats(shapes, mask)
+    assert stats["trainable"] == 12 * 2 * 768 * 2  # adapters + ffn norms
+    assert 0.02 < stats["percent"] < 0.045, stats
+
+
+def test_paper_param_fraction_table5():
+    """Unfreezing 8/12 layers -> ~0.022 % (paper's further reduction)."""
+    cfg = peft.attach(get_cfg("bert-base"), peft.strategy("hadamard"))
+    shapes = params_shapes(cfg)
+    mask = peft.trainable_mask(shapes, peft.strategy("hadamard"))
+    gate = peft.layer_gate(shapes, cfg, top_layers=8)
+    n = peft.gated_param_count(shapes, mask, gate)
+    frac = 100.0 * n / peft.param_stats(shapes, mask)["total"]
+    assert n == 8 * 2 * 768 * 2
+    assert 0.015 < frac < 0.03
+
+
+def test_ablation_strategies():
+    cfg = peft.attach(tiny_cfg(), peft.strategy("hadamard"))
+    p = M.init_params(KEY, cfg)
+    for mods, expect in [("W", "adapter/w"), ("B", "adapter/b"),
+                         ("N", "ffn_norm"), ("A", "attn_norm")]:
+        s = peft.ablation_strategy(mods)
+        mask = peft.trainable_mask(p, s)
+        sel = [pth for (pth, v), m in zip(tu.flatten_with_paths(p),
+                                          jax.tree.leaves(mask)) if m]
+        assert sel and all(expect in t for t in sel), (mods, sel)
+
+
+def test_layer_gate_zeroes_lower_layers():
+    cfg = peft.attach(tiny_cfg(), peft.strategy("hadamard"))
+    p = M.init_params(KEY, cfg)
+    gate = peft.layer_gate(p, cfg, top_layers=1)
+    g = dict(tu.flatten_with_paths(gate))
+    ad_gate = g["blocks/g0/slot0/adapter/w"]
+    assert np.asarray(ad_gate).reshape(-1).tolist() == [0.0, 1.0]  # 2 layers
+
+
+def test_fold_adapter_equivalence():
+    for position in ("attn_out", "attn_concat"):
+        from repro.common.types import AdapterCfg
+
+        cfg = tiny_cfg(adapter=AdapterCfg(kind="hadamard", position=position),
+                       attn_bias=True)
+        p = M.init_params(KEY, cfg)
+        # non-trivial adapter
+        def perturb(path, v):
+            if path.endswith("adapter/w"):
+                return v + 0.1 * jax.random.normal(
+                    jax.random.fold_in(KEY, 1), v.shape)
+            if path.endswith("adapter/b"):
+                return v + 0.1 * jax.random.normal(
+                    jax.random.fold_in(KEY, 2), v.shape)
+            return v
+
+        p = tu.map_with_path(perturb, p)
+        toks = jax.random.randint(KEY, (2, 10), 0, 97)
+        want, _ = M.forward_lm(p, cfg, toks)
+        folded = H.fold_adapter(p, cfg)
+        got, _ = M.forward_lm(folded, cfg, toks)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-4, err_msg=position)
+
+
+def test_delta_extract_apply_roundtrip():
+    cfg = peft.attach(tiny_cfg(), peft.strategy("hadamard"))
+    p = M.init_params(KEY, cfg)
+    p2 = tu.map_with_path(
+        lambda path, v: v + 1.0 if "adapter" in path else v, p)
+    delta = H.extract_delta(p2)
+    n_delta = tu.count_params(delta)
+    assert n_delta < 0.1 * tu.count_params(p)
+    restored = H.apply_delta(p, delta)
+    toks = jax.random.randint(KEY, (1, 8), 0, 97)
+    want, _ = M.forward_lm(p2, cfg, toks)
+    got, _ = M.forward_lm(restored, cfg, toks)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+def test_pattern_analysis():
+    cfg = peft.attach(tiny_cfg(), peft.strategy("hadamard"))
+    tasks = {}
+    for i, t in enumerate(["a", "b", "c"]):
+        p = M.init_params(KEY, cfg)
+        p = tu.map_with_path(
+            lambda path, v, i=i: v + 0.01 * (i + 1) * jax.random.normal(
+                jax.random.fold_in(KEY, 7 + i + abs(hash(path)) % 100), v.shape)
+            if "adapter/b" in path else v, p)
+        tasks[t] = p
+    sim = patterns.cross_task_similarity(tasks, cfg)
+    rep = patterns.consistency_report(sim)
+    # w untouched across tasks -> cosine 1; b perturbed differently -> < 1
+    assert rep["w_mean_cross_task_cos"] > 0.999
+    assert rep["b_mean_cross_task_cos"] < 0.9
+    dist = patterns.layer_distributions(tasks["a"], cfg)
+    assert dist["w"].shape == (2, 5)
+    shared_w, bs = patterns.suggest_shared_weight(tasks, cfg)
+    assert shared_w.shape == (2, 64) and len(bs) == 3
+
+
+def test_multitask_bank_select():
+    cfg = peft.attach(tiny_cfg(), peft.strategy("hadamard"))
+    p0 = M.init_params(KEY, cfg)
+    p1 = tu.map_with_path(
+        lambda path, v: v + 1.0 if "adapter/b" in path else v, p0)
+    bank = H.build_bank([p0, p1])
+    sel = H.select_tasks(bank, jnp.array([1, 0]))
+    toks = jax.random.randint(KEY, (2, 8), 0, 97)
+    got, _ = M.forward_lm(sel, cfg, toks)
+    # request 0 uses task-1 adapter, request 1 uses task-0 adapter
+    want1, _ = M.forward_lm(p1, cfg, toks)
+    want0, _ = M.forward_lm(p0, cfg, toks)
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want1[0]), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got[1]), np.asarray(want0[1]), atol=1e-5)

@@ -1,0 +1,305 @@
+"""Substrate: optimizer, schedules, compression, data, checkpoints,
+fault-tolerance (crash/resume bitwise), elastic re-shard, serving engines.
+"""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import tiny_cfg
+from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.store import load_tree, save_tree
+from repro.common import tree as tu
+from repro.common.types import OptimCfg
+from repro.core import peft
+from repro.data.pipeline import Prefetcher
+from repro.data.synthetic import TASKS, TaskData, lm_batches, lm_corpus
+from repro.models import model as M
+from repro.optim.adamw import adamw_init, adamw_update, clip_by_global_norm
+from repro.optim.compression import compress, ef_init
+from repro.optim.schedule import lr_at
+from repro.train.metrics import matthews_corrcoef, pearson
+from repro.train.steps import build_train_step, make_state, merged_params
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+
+def test_adamw_converges_quadratic():
+    p = {"w": jnp.array([5.0, -3.0]), "frozen": None}
+    st_ = adamw_init(p)
+    cfg = OptimCfg(lr=0.1, weight_decay=0.0)
+    for _ in range(200):
+        g = {"w": 2 * p["w"], "frozen": None}
+        p, st_ = adamw_update(g, st_, p, cfg, 0.1)
+    assert float(jnp.abs(p["w"]).max()) < 1e-2
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones((10,)) * 10.0}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(tu.global_norm(clipped)) <= 1.0 + 1e-5
+    assert float(norm) > 1.0
+
+
+def test_schedules_shapes():
+    for sched in ("constant", "linear", "cosine"):
+        cfg = OptimCfg(lr=1e-3, schedule=sched, warmup_steps=10,
+                       total_steps=100, min_lr_ratio=0.1)
+        lrs = [float(lr_at(cfg, jnp.asarray(s))) for s in [0, 5, 10, 50, 100]]
+        assert lrs[0] < lrs[2]  # warmup rises
+        assert lrs[-1] <= lrs[2] + 1e-9  # decays (or constant)
+        assert lrs[-1] >= 1e-4 - 1e-9  # floor
+
+
+def test_compression_error_feedback_unbiased():
+    """EF accumulates: sum of dequantized grads ~ sum of true grads."""
+    g = {"w": jax.random.normal(KEY, (256,)) * 1e-3}
+    err = ef_init(g)
+    total_q = jnp.zeros((256,))
+    for i in range(50):
+        gq, err = compress(g, err)
+        total_q = total_q + gq["w"]
+    np.testing.assert_allclose(np.asarray(total_q), np.asarray(g["w"] * 50),
+                               rtol=0.05, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("task", sorted(TASKS))
+def test_task_data_deterministic_and_learnable_format(task):
+    d1 = TaskData(task, 512, seq_len=32, n_train=64, n_eval=32, seed=7)
+    d2 = TaskData(task, 512, seq_len=32, n_train=64, n_eval=32, seed=7)
+    np.testing.assert_array_equal(d1.train["tokens"], d2.train["tokens"])
+    spec = TASKS[task]
+    if spec.n_classes == 1:
+        assert d1.train["labels"].dtype == np.float32
+        assert 0 <= d1.train["labels"].min() and d1.train["labels"].max() <= 5
+    else:
+        assert set(np.unique(d1.train["labels"])) <= set(range(spec.n_classes))
+    b = next(d1.train_batches(1, 8))
+    assert b["tokens"].shape == (8, 32)
+
+
+def test_lm_corpus_has_structure():
+    c = lm_corpus(512, 20000, seed=0)
+    b = next(lm_batches(c, 1, 4, 16))
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_prefetcher_preserves_order_and_errors():
+    out = list(Prefetcher(iter(range(10)), depth=3))
+    assert out == list(range(10))
+
+    def boom():
+        yield 1
+        raise ValueError("boom")
+
+    it = Prefetcher(boom())
+    assert next(it) == 1
+    with pytest.raises(ValueError):
+        list(it)
+
+
+def test_metrics():
+    assert matthews_corrcoef([1, 1, 0, 0], [1, 1, 0, 0]) == 1.0
+    assert abs(matthews_corrcoef([1, 0, 1, 0], [1, 1, 0, 0])) < 1e-9
+    assert pearson([1, 2, 3], [2, 4, 6]) == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint + fault tolerance
+# ---------------------------------------------------------------------------
+
+
+def test_store_roundtrip_dtypes():
+    tree = {"a": jnp.ones((3, 4), jnp.bfloat16),
+            "n": {"b": jnp.arange(5, dtype=jnp.int32)}}
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "x.ckpt")
+        save_tree(path, tree, metadata={"step": 3})
+        got, meta = load_tree(path)
+        assert meta["step"] == 3
+        assert str(got["a"].dtype) == "bfloat16"
+        np.testing.assert_array_equal(np.asarray(got["n"]["b"]),
+                                      np.arange(5))
+
+
+def test_manager_keep_k_and_latest():
+    with tempfile.TemporaryDirectory() as td:
+        mgr = CheckpointManager(td, keep=2)
+        for s in (1, 2, 3, 4):
+            mgr.save(s, {"v": jnp.asarray([s])})
+        assert mgr.steps() == [3, 4]
+        tree, meta = mgr.restore()
+        assert meta["step"] == 4
+
+
+def test_crash_resume_bitwise_identical():
+    """Train 6 steps; separately train 3, checkpoint, 'crash', restore, and
+    train 3 more on the same data: final params must match bitwise."""
+    cfg = peft.attach(tiny_cfg(), peft.strategy("hadamard"))
+    strat = peft.strategy("hadamard")
+    ocfg = OptimCfg(lr=1e-3, total_steps=6)
+    corpus = lm_corpus(cfg.vocab_size, 5000, seed=1)
+
+    def batches():
+        return lm_batches(corpus, 6, 4, 16, seed=2)
+
+    step = jax.jit(build_train_step(cfg, ocfg))
+
+    state = make_state(KEY, cfg, strat, ocfg)
+    for b in batches():
+        state, _ = step(state, b)
+    want = merged_params(state)
+
+    with tempfile.TemporaryDirectory() as td:
+        mgr = CheckpointManager(td, keep=2)
+        state2 = make_state(KEY, cfg, strat, ocfg)
+        it = batches()
+        for i in range(3):
+            state2, _ = step(state2, next(it))
+        mgr.save(3, state2)
+        del state2  # "crash"
+
+        restored, meta = mgr.restore()
+        assert meta["step"] == 3
+        from repro.checkpoint import restore_into
+
+        state3 = make_state(KEY, cfg, strat, ocfg)  # fresh skeleton
+        state3 = restore_into(state3, restored)
+        for i in range(3):
+            state3, _ = step(state3, next(it))
+        got = merged_params(state3)
+
+    for (pa, va), (pb, vb) in zip(tu.flatten_with_paths(want),
+                                  tu.flatten_with_paths(got)):
+        assert pa == pb
+        np.testing.assert_array_equal(np.asarray(va), np.asarray(vb), err_msg=pa)
+
+
+def test_delta_checkpoint_is_small():
+    from repro.core.hadamard import extract_delta
+
+    cfg = peft.attach(tiny_cfg(), peft.strategy("hadamard"))
+    p = M.init_params(KEY, cfg)
+    with tempfile.TemporaryDirectory() as td:
+        mgr = CheckpointManager(td, keep=1)
+        mgr.save(1, p)
+        mgr.save_delta(1, extract_delta(p))
+        full = os.path.getsize(os.path.join(td, "step_0000000001", "state.ckpt"))
+        delta = os.path.getsize(os.path.join(td, "step_0000000001", "delta.ckpt"))
+        assert delta < 0.2 * full
+
+
+def test_async_checkpointing():
+    with tempfile.TemporaryDirectory() as td:
+        mgr = CheckpointManager(td, keep=3, async_write=True)
+        for s in (1, 2, 3):
+            mgr.save(s, {"v": jnp.asarray([s])})
+        mgr.wait()
+        assert mgr.steps() == [1, 2, 3]
+
+
+# ---------------------------------------------------------------------------
+# training integration
+# ---------------------------------------------------------------------------
+
+
+def test_frozen_params_stay_frozen():
+    cfg = peft.attach(tiny_cfg(), peft.strategy("hadamard"))
+    strat = peft.strategy("hadamard")
+    ocfg = OptimCfg(lr=1e-2, total_steps=5)
+    state = make_state(KEY, cfg, strat, ocfg)
+    before = [(p, np.asarray(v).copy())
+              for p, v in tu.flatten_with_paths(state["frozen"])]
+    step = jax.jit(build_train_step(cfg, ocfg))
+    corpus = lm_corpus(cfg.vocab_size, 4000, seed=3)
+    for b in lm_batches(corpus, 3, 4, 16):
+        state, _ = step(state, b)
+    for (pa, va), (pb, vb) in zip(before,
+                                  tu.flatten_with_paths(state["frozen"])):
+        assert pa == pb
+        np.testing.assert_array_equal(va, np.asarray(vb), err_msg=pa)
+
+
+def test_microbatch_grad_accum_matches_full_batch():
+    cfg = peft.attach(tiny_cfg(), peft.strategy("hadamard"))
+    strat = peft.strategy("hadamard")
+    ocfg = OptimCfg(lr=1e-3, total_steps=5, grad_clip=0.0)
+    corpus = lm_corpus(cfg.vocab_size, 4000, seed=4)
+    batch = next(lm_batches(corpus, 1, 8, 16))
+
+    s1 = make_state(KEY, cfg, strat, ocfg)
+    s2 = jax.tree.map(lambda x: x, s1, is_leaf=lambda v: v is None)
+    full = jax.jit(build_train_step(cfg, ocfg))
+    micro = jax.jit(build_train_step(cfg, ocfg, microbatch=4))
+    s1, m1 = full(s1, batch)
+    s2, m2 = micro(s2, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]), rtol=1e-5)
+    a1 = s1["trainable"]["blocks"]["g0"]["slot0"]["adapter"]["b"]
+    a2 = s2["trainable"]["blocks"]["g0"]["slot0"]["adapter"]["b"]
+    np.testing.assert_allclose(np.asarray(a1), np.asarray(a2), atol=1e-6)
+
+
+def test_compressed_grads_still_learn():
+    cfg = peft.attach(tiny_cfg(), peft.strategy("hadamard"))
+    strat = peft.strategy("hadamard")
+    ocfg = OptimCfg(lr=5e-3, total_steps=20, compress_grads=True)
+    state = make_state(KEY, cfg, strat, ocfg)
+    step = jax.jit(build_train_step(cfg, ocfg))
+    corpus = lm_corpus(cfg.vocab_size, 5000, seed=5)
+    losses = []
+    for b in lm_batches(corpus, 20, 8, 16, seed=6):
+        state, m = step(state, b)
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5])
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def test_serve_engine_greedy_matches_forward_argmax():
+    from repro.serving.engine import ServeEngine
+
+    cfg = peft.attach(tiny_cfg(), peft.strategy("hadamard"))
+    p = M.init_params(KEY, cfg)
+    toks = np.asarray(jax.random.randint(KEY, (2, 8), 10, 97))
+    eng = ServeEngine(cfg, p)
+    out = eng.generate(toks, 3)
+    assert out.shape == (2, 3)
+    # first generated token == argmax of teacher-forced logits at pos 7
+    logits, _ = M.forward_lm(p, cfg, jnp.asarray(toks))
+    np.testing.assert_array_equal(out[:, 0],
+                                  np.asarray(jnp.argmax(logits[:, 7], -1)))
+
+
+def test_multitask_engine_routes_tasks():
+    from repro.serving.engine import MultiTaskEngine
+
+    cfg = peft.attach(tiny_cfg(), peft.strategy("hadamard"))
+    p0 = M.init_params(KEY, cfg)
+    p1 = tu.map_with_path(
+        lambda path, v: v + 0.5 if "adapter/b" in path else v, p0)
+    eng = MultiTaskEngine(cfg, [p0, p1])
+    toks = np.asarray(jax.random.randint(KEY, (2, 8), 10, 97))
+    out_mixed = eng.generate_for_tasks(toks, np.array([0, 1]), 2)
+    from repro.serving.engine import ServeEngine
+
+    out_t0 = ServeEngine(cfg, p0).generate(toks, 2)
+    out_t1 = ServeEngine(cfg, p1).generate(toks, 2)
+    np.testing.assert_array_equal(out_mixed[0], out_t0[0])
+    np.testing.assert_array_equal(out_mixed[1], out_t1[1])

@@ -1,0 +1,42 @@
+"""End-to-end behaviour tests for the paper's system: the full two-stage
+Hadamard recipe runs end to end on a learnable synthetic task with the
+paper's parameter economy, and the resulting adapter delta is KB-sized.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.common.types import OptimCfg, TrainCfg
+from repro.configs import PAPER
+from repro.core.hadamard import extract_delta
+from repro.data.synthetic import TaskData
+from repro.train.loop import two_stage_finetune
+from repro.train.pretrain import pretrain_encoder
+from repro.common import tree as tu
+
+
+def test_two_stage_recipe_end_to_end(tmp_path):
+    cfg = PAPER["bert-tiny"]()
+    params = pretrain_encoder(cfg, steps=60, batch=16, seq=32,
+                              cache_dir=str(tmp_path))
+    data = TaskData("sst2", cfg.vocab_size, seq_len=32, n_train=512,
+                    n_eval=128, seed=0)
+    stage = lambda lr, n: TrainCfg(
+        optim=OptimCfg(lr=lr, total_steps=n, warmup_steps=5),
+        steps=n, batch_size=16, log_every=0)
+    res = two_stage_finetune(
+        jax.random.PRNGKey(0), cfg, "hadamard", data,
+        stage1=stage(3e-3, 40), stage2=stage(8e-3, 40), metric="acc",
+        pretrained_params=params, log=lambda s: None)
+
+    # mechanism checks (absolute quality needs bigger budgets; see
+    # benchmarks/table2): the run completes, stays finite, trains only the
+    # paper's modules, and the adapter delta is KB-sized
+    assert 0.0 <= res["final_metric"] <= 1.0
+    stats = res["param_stats"]
+    assert stats["percent"] < 1.0  # well under 1% trainable
+    delta = extract_delta(res["params"])
+    assert tu.count_params(delta) < 0.05 * stats["total"]
+
+    # adapters moved away from the identity during stage 2
+    ad = res["params"]["blocks"]["g0"]["slot0"]["adapter"]
+    assert float(jnp.abs(ad["b"]).max()) > 0
