@@ -1,0 +1,103 @@
+"""Delegating stand-in for `hypothesis`.
+
+The container this repo is verified in does not ship hypothesis and
+installing packages is off-limits, so tests/test_invariants.py would die
+at import. This module first tries to load the REAL hypothesis from any
+sys.path entry other than this directory (so a proper install always
+wins); only when none exists does it fall back to a minimal
+deterministic implementation of the tiny API surface the tests use:
+
+    @settings(max_examples=N, deadline=None)
+    @given(x=st.integers(lo, hi), y=st.sampled_from([...]))
+    def test_...(x, y): ...
+
+The fallback enumerates `max_examples` pseudo-random draws seeded from
+the test name, so property tests still exercise many distinct inputs and
+remain reproducible run-to-run.
+"""
+from __future__ import annotations
+
+import importlib.machinery
+import importlib.util
+import os
+import sys
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_other_paths = [
+    p for p in sys.path
+    if os.path.abspath(p or os.getcwd()) != _HERE
+]
+_spec = importlib.machinery.PathFinder.find_spec("hypothesis", _other_paths)
+
+if _spec is not None:  # a real install exists: become it
+    _mod = importlib.util.module_from_spec(_spec)
+    sys.modules[__name__] = _mod
+    _spec.loader.exec_module(_mod)
+else:
+    import hashlib
+    import random as _random
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example_for(self, rng: _random.Random):
+            return self._draw(rng)
+
+    class strategies:  # namespace mirroring `hypothesis.strategies`
+        @staticmethod
+        def integers(min_value=0, max_value=1 << 30):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: rng.choice(elements))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+    st = strategies
+    _DEFAULT_MAX_EXAMPLES = 10
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+        def apply(fn):
+            fn._stub_max_examples = max_examples
+            return fn
+
+        return apply
+
+    def given(**strat_kw):
+        def deco(fn):
+            def wrapper():
+                n = getattr(wrapper, "_stub_max_examples",
+                            _DEFAULT_MAX_EXAMPLES)
+                for i in range(n):
+                    seed = hashlib.sha256(
+                        f"{fn.__module__}.{fn.__name__}:{i}".encode()
+                    ).digest()
+                    rng = _random.Random(seed)
+                    kwargs = {
+                        k: s.example_for(rng) for k, s in strat_kw.items()
+                    }
+                    try:
+                        fn(**kwargs)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"falsifying example ({i + 1}/{n}): {kwargs}"
+                        ) from e
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__module__ = fn.__module__
+            wrapper.__doc__ = fn.__doc__
+            wrapper._stub_max_examples = getattr(
+                fn, "_stub_max_examples", _DEFAULT_MAX_EXAMPLES)
+            return wrapper
+
+        return deco

@@ -10,9 +10,15 @@ from __future__ import annotations
 import os
 from typing import Dict, Optional
 
+import zlib
+
 import msgpack
 import numpy as np
-import zstandard
+
+try:  # optional: better ratio/speed than zlib, but not always installed
+    import zstandard
+except ImportError:
+    zstandard = None
 
 import jax
 import ml_dtypes  # ships with jax
@@ -62,8 +68,10 @@ def save_tree(path: str, tree, *, compress: bool = True,
         },
     }
     raw = msgpack.packb(payload, use_bin_type=True)
-    if compress:
+    if compress and zstandard is not None:
         raw = b"ZSTD" + zstandard.ZstdCompressor(level=3).compress(raw)
+    elif compress:
+        raw = b"ZLIB" + zlib.compress(raw, level=3)
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:
         f.write(raw)
@@ -76,7 +84,12 @@ def load_tree(path: str):
     with open(path, "rb") as f:
         raw = f.read()
     if raw[:4] == b"ZSTD":
+        if zstandard is None:
+            raise ImportError(
+                f"{path} is zstd-compressed but `zstandard` is not installed")
         raw = zstandard.ZstdDecompressor().decompress(raw[4:])
+    elif raw[:4] == b"ZLIB":
+        raw = zlib.decompress(raw[4:])
     payload = msgpack.unpackb(raw, raw=False)
     flat = {}
     for k, spec in payload["arrays"].items():

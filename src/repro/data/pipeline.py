@@ -14,19 +14,23 @@ from typing import Iterator, Optional
 import jax
 import numpy as np
 
-from repro.dist.api import named_sharding
+from jax.sharding import NamedSharding
+
+from repro.dist.sharding import batch_spec
 
 
 def shard_batch(batch: dict, mesh=None):
-    """device_put each leaf with batch-dim sharding over the dp axes."""
-    sh = named_sharding("dp", mesh=mesh) if mesh is not None else None
-    if sh is None:
+    """device_put each leaf with batch-dim sharding over the dp axes.
+
+    `batch_spec` drops the dp entry when the leading dim is indivisible
+    (e.g. a ragged last batch), so placement never raises."""
+    if mesh is None:
         return batch
-    out = {}
-    for k, v in batch.items():
-        spec = named_sharding(*(("dp",) + (None,) * (np.ndim(v) - 1)), mesh=mesh)
-        out[k] = jax.device_put(v, spec)
-    return out
+    return {
+        k: jax.device_put(
+            v, NamedSharding(mesh, batch_spec(mesh, np.ndim(v), np.shape(v))))
+        for k, v in batch.items()
+    }
 
 
 def shard_batches(batches: Iterator[dict], mesh=None) -> Iterator[dict]:

@@ -1,0 +1,39 @@
+"""Distribution subsystem: mesh context, logical-axis constraints, and the
+path-pattern sharding rule engine.
+
+`repro.dist.api` is the thin runtime layer every model/data module talks
+to (no-op without an active mesh, so single-device code paths stay
+byte-identical); `repro.dist.sharding` turns param/cache tree paths into
+`PartitionSpec`s for every assigned architecture.
+"""
+from repro.dist.api import (
+    constrain,
+    current_mesh,
+    dp_axes,
+    mesh_axis_sizes,
+    named_sharding,
+    use_mesh,
+)
+from repro.dist.sharding import (
+    batch_spec,
+    cache_shardings,
+    cache_spec,
+    fit_spec,
+    param_spec,
+    params_shardings,
+)
+
+__all__ = [
+    "constrain",
+    "current_mesh",
+    "dp_axes",
+    "mesh_axis_sizes",
+    "named_sharding",
+    "use_mesh",
+    "batch_spec",
+    "cache_shardings",
+    "cache_spec",
+    "fit_spec",
+    "param_spec",
+    "params_shardings",
+]

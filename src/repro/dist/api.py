@@ -1,0 +1,112 @@
+"""Mesh context + logical-axis constraint API.
+
+The model/data/train layers never name raw mesh axes; they speak two
+logical axes:
+
+  'dp'     - the data-parallel direction: ('pod', 'data') on a multi-pod
+             mesh, ('data',) on a single pod.
+  'model'  - the tensor-parallel direction.
+
+`use_mesh` activates a mesh for the current context (trace-time: jit'd
+functions capture whatever mesh is active while they are being traced).
+Without an active mesh every helper is a no-op, so the exact same model
+code runs single-device in unit tests and SPMD in production.
+
+`constrain` additionally drops any axis that does not evenly divide its
+dim (jit rejects uneven shardings), which is what lets one constraint
+point serve every architecture: e.g. the vocab dim of the logits is
+model-sharded for the 151936-vocab configs and silently replicated for
+the 97-vocab test config.
+"""
+from __future__ import annotations
+
+import contextlib
+from contextvars import ContextVar
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_ACTIVE_MESH: ContextVar = ContextVar("repro_dist_active_mesh", default=None)
+
+
+def current_mesh():
+    """The mesh activated by the innermost `use_mesh`, or None."""
+    return _ACTIVE_MESH.get()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    """Activate `mesh` for the dynamic extent of the block.
+
+    jit'd functions pick the mesh up at trace time, so build/trace them
+    inside the block (the dry-run and the launchers do exactly this).
+    """
+    token = _ACTIVE_MESH.set(mesh)
+    try:
+        yield mesh
+    finally:
+        _ACTIVE_MESH.reset(token)
+
+
+def mesh_axis_sizes(mesh) -> Dict[str, int]:
+    """{axis_name: size}. Works on jax Meshes and duck-typed test meshes."""
+    return dict(zip(tuple(mesh.axis_names), tuple(mesh.devices.shape)))
+
+
+def dp_axes(mesh) -> Tuple[str, ...]:
+    """Mesh axes forming the data-parallel direction."""
+    return ("pod", "data") if "pod" in tuple(mesh.axis_names) else ("data",)
+
+
+def _resolve(axes, mesh):
+    """Map logical entries ('dp'/'model'/None/raw axis names) to mesh axes."""
+    out = []
+    for a in axes:
+        if a == "dp":
+            dp = dp_axes(mesh)
+            out.append(dp[0] if len(dp) == 1 else dp)
+        else:
+            out.append(a)
+    return out
+
+
+def _axis_size(entry, sizes: Dict[str, int]) -> int:
+    names = entry if isinstance(entry, tuple) else (entry,)
+    n = 1
+    for a in names:
+        n *= sizes.get(a, 1)
+    return n
+
+
+def constrain(x, *axes):
+    """`with_sharding_constraint` under an active mesh; identity otherwise.
+
+    Axis entries that do not evenly divide their dim are dropped, so the
+    same call site is valid for every (config x mesh) combination.
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    sizes = mesh_axis_sizes(mesh)
+    entries = []
+    for dim, a in zip(x.shape, _resolve(axes, mesh)):
+        if a is None or dim % _axis_size(a, sizes) != 0:
+            entries.append(None)
+        else:
+            entries.append(a)
+    if all(e is None for e in entries):
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*entries)))
+
+
+def named_sharding(*axes, mesh=None) -> Optional[NamedSharding]:
+    """A NamedSharding over logical axes, for host-side `device_put`.
+
+    Uses the explicit `mesh` if given, else the active one; returns None
+    when neither exists (callers treat that as "leave on host/default").
+    """
+    mesh = mesh if mesh is not None else current_mesh()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, P(*_resolve(axes, mesh)))

@@ -257,6 +257,8 @@ def _compile_costs(cfg, spec, mesh, peft_name):
     lowered, _ = _lower_cell(cfg, spec, mesh, peft_name, donate=False)
     compiled = lowered.compile()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # older jax returns [dict]
+        ca = ca[0] if ca else {}
     colls = collective_bytes(compiled.as_text())
     return {
         "flops": float(ca.get("flops", 0.0)),

@@ -27,3 +27,12 @@ def make_host_mesh(data: int = 2, model: int = 4):
         data, model = 1, n
     return jax.make_mesh((data, model), ("data", "model"),
                          axis_types=(AxisType.Auto, AxisType.Auto))
+
+
+def parse_mesh(spec: str):
+    """CLI mesh spec: '' -> None; 'DxM' (e.g. '2x4') -> (data, model) host
+    mesh (pair with XLA_FLAGS=--xla_force_host_platform_device_count=N)."""
+    if not spec:
+        return None
+    data, model = (int(v) for v in spec.lower().split("x"))
+    return make_host_mesh(data, model)

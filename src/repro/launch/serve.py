@@ -14,6 +14,8 @@ import numpy as np
 
 from repro.configs import get, get_smoke
 from repro.core import peft
+from repro.dist.api import use_mesh
+from repro.launch.mesh import parse_mesh
 from repro.models import model as M
 from repro.serving.engine import MultiTaskEngine, ServeEngine
 
@@ -29,9 +31,13 @@ def main():
                     help=">0: multi-task adapter bank serving demo")
     ap.add_argument("--fold", action="store_true",
                     help="fold the adapter into W_O (zero-overhead serving)")
+    ap.add_argument("--mesh", default="",
+                    help="'DATAxMODEL' (e.g. 2x4): serve the backbone "
+                         "sharded over a host mesh")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
+    mesh = parse_mesh(args.mesh)
     cfg = get_smoke(args.arch) if args.smoke else get(args.arch)
     cfg = peft.attach(cfg, peft.strategy("hadamard"))
     key = jax.random.PRNGKey(args.seed)
@@ -55,7 +61,8 @@ def main():
                         leaf.shape, leaf.dtype)
                 return leaf
             variants.append(tu.map_with_path(perturb, v))
-        engine = MultiTaskEngine(cfg, variants)
+        with use_mesh(mesh):  # engine captures the mesh; params placed sharded
+            engine = MultiTaskEngine(cfg, variants)
         task_ids = np.arange(args.batch) % args.tasks
         t0 = time.perf_counter()
         out = engine.generate_for_tasks(tokens, task_ids, args.new_tokens)
@@ -63,7 +70,8 @@ def main():
         print(f"multi-task generate: tasks={task_ids.tolist()}")
     else:
         params = M.init_params(key, cfg)
-        engine = ServeEngine(cfg, params, fold=args.fold)
+        with use_mesh(mesh):
+            engine = ServeEngine(cfg, params, fold=args.fold)
         t0 = time.perf_counter()
         out = engine.generate(tokens, args.new_tokens)
         dt = time.perf_counter() - t0

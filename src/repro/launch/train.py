@@ -20,8 +20,10 @@ from repro.checkpoint.manager import CheckpointManager
 from repro.common.types import OptimCfg, TrainCfg
 from repro.configs import PAPER, get, get_smoke
 from repro.core import peft
-from repro.data.pipeline import Prefetcher
+from repro.data.pipeline import Prefetcher, shard_batches
 from repro.data.synthetic import TASKS, TaskData, lm_batches, lm_corpus
+from repro.dist.api import use_mesh
+from repro.launch.mesh import parse_mesh
 from repro.train.loop import StepWatchdog, run_train, two_stage_finetune
 from repro.train.steps import build_train_step, make_state
 
@@ -44,8 +46,13 @@ def main():
     ap.add_argument("--save-every", type=int, default=0)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--mesh", default="",
+                    help="'DATAxMODEL' (e.g. 2x4): train SPMD on a host "
+                         "mesh (pair with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
     args = ap.parse_args()
 
+    mesh = parse_mesh(args.mesh)
     cfg = get_smoke(args.arch) if args.smoke else get(args.arch)
     strat = peft.strategy(args.peft)
     ocfg = OptimCfg(lr=args.lr, total_steps=args.steps,
@@ -62,26 +69,30 @@ def main():
         print(f"final {TASKS[task].metric}: {res['final_metric']:.4f}")
         return
 
-    # decoder-family LM fine-tuning with PEFT
+    # decoder-family LM fine-tuning with PEFT (optionally SPMD over a mesh)
     cfg = peft.attach(cfg, strat)
     corpus = lm_corpus(cfg.vocab_size, 200_000, seed=args.seed)
-    batches = Prefetcher(lm_batches(corpus, args.steps, args.batch, args.seq,
-                                    seed=args.seed))
-    state = make_state(jax.random.PRNGKey(args.seed), cfg, strat, ocfg)
-    manager = None
-    if args.ckpt_dir:
-        manager = CheckpointManager(args.ckpt_dir, keep=3)
-        if args.resume and manager.latest() is not None:
-            from repro.checkpoint import restore_into
+    source = lm_batches(corpus, args.steps, args.batch, args.seq,
+                        seed=args.seed)
+    if mesh is not None:
+        source = shard_batches(source, mesh)  # sharded device_put on the dp axes
+    batches = Prefetcher(source)
+    with use_mesh(mesh):  # use_mesh(None) is a no-op
+        state = make_state(jax.random.PRNGKey(args.seed), cfg, strat, ocfg)
+        manager = None
+        if args.ckpt_dir:
+            manager = CheckpointManager(args.ckpt_dir, keep=3)
+            if args.resume and manager.latest() is not None:
+                from repro.checkpoint import restore_into
 
-            restored, meta = manager.restore()
-            state = restore_into(state, restored)
-            print(f"resumed from step {meta['step']}")
-    step = build_train_step(cfg, ocfg)
-    state, hist = run_train(state, step, batches, steps=args.steps,
-                            log_every=10, manager=manager,
-                            save_every=args.save_every,
-                            watchdog=StepWatchdog())
+                restored, meta = manager.restore()
+                state = restore_into(state, restored)
+                print(f"resumed from step {meta['step']}")
+        step = build_train_step(cfg, ocfg)
+        state, hist = run_train(state, step, batches, steps=args.steps,
+                                log_every=10, manager=manager,
+                                save_every=args.save_every,
+                                watchdog=StepWatchdog())
     print(f"final loss: {hist[-1]['loss']:.4f}")
 
 

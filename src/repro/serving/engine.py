@@ -1,11 +1,16 @@
-"""Serving engine: batched prefill + greedy decode with KV caches, and
-multi-task Hadamard serving (one frozen backbone, per-request adapters).
+"""Serving engine: batched prefill + greedy/top-k decode with KV caches,
+and multi-task Hadamard serving (one frozen backbone, per-request adapters).
 
 The multi-task path is the deployment story the paper's §5 analysis points
 at: adapters are 2*L*d floats per task, so a bank of hundreds of tasks is
 megabytes; requests carrying different task ids batch together and each
 token is transformed by its own (w, b) - the Hadamard analogue of
 multi-LoRA serving.
+
+Sharded serving: construct the engine inside `use_mesh(mesh)` and it
+places the (folded/bank) params per `params_shardings` and re-activates
+the mesh around every prefill/decode trace, so one model-sharded backbone
+serves all tasks. Without a mesh everything stays single-device.
 """
 from __future__ import annotations
 
@@ -17,6 +22,8 @@ import numpy as np
 
 from repro.common.types import ModelCfg
 from repro.core.hadamard import build_bank, fold_adapter, select_tasks
+from repro.dist.api import current_mesh, use_mesh
+from repro.dist.sharding import params_shardings
 from repro.models import model as M
 
 
@@ -38,7 +45,8 @@ class ServeEngine:
         if fold and cfg.adapter.kind == "hadamard":
             params = fold_adapter(params, cfg)
         self.cfg = cfg
-        self.params = params
+        self.mesh = current_mesh()
+        self.params = self._place(params)
         self._prefill = jax.jit(
             lambda p, toks, cl: M.prefill_lm(p, cfg, toks, cache_len=cl),
             static_argnums=(2,),
@@ -48,22 +56,45 @@ class ServeEngine:
             donate_argnums=(1,),
         )
 
+    # -- mesh plumbing ------------------------------------------------------
+
+    def _place(self, params):
+        """Shard params over the construction-time mesh (no-op without one)."""
+        if self.mesh is None:
+            return params
+        return jax.device_put(
+            params, params_shardings(params, self.cfg, self.mesh))
+
+    def _mesh_ctx(self):
+        """Re-activate the engine's mesh so jit traces see its constraints
+        (use_mesh(None) is a no-op for meshless engines)."""
+        return use_mesh(self.mesh)
+
+    # -- sampling -----------------------------------------------------------
+
+    def _sample(self, logits, rng, top_k: int):
+        """One sampling decision; returns (token, advanced rng)."""
+        if top_k and rng is not None:
+            rng, sub = jax.random.split(rng)
+            return sample_topk(logits, sub, k=top_k), rng
+        return sample_greedy(logits), rng
+
     def generate(self, tokens: np.ndarray, max_new_tokens: int,
                  rng: Optional[jax.Array] = None, top_k: int = 0):
         B, S = tokens.shape
         cache_len = S + max_new_tokens
-        logits, caches = self._prefill(self.params, jnp.asarray(tokens), cache_len)
-        out = []
-        tok = sample_greedy(logits)
-        for i in range(max_new_tokens):
-            out.append(tok)
-            logits, caches = self._decode(
-                self.params, caches, tok[:, None], jnp.int32(S + i))
-            if top_k and rng is not None:
-                rng, sub = jax.random.split(rng)
-                tok = sample_topk(logits, sub, k=top_k)
-            else:
-                tok = sample_greedy(logits)
+        with self._mesh_ctx():
+            logits, caches = self._prefill(
+                self.params, jnp.asarray(tokens), cache_len)
+            out = []
+            # the first post-prefill token goes through the same sampling
+            # path as every later one (greedy only when sampling is off)
+            tok, rng = self._sample(logits, rng, top_k)
+            for i in range(max_new_tokens):
+                out.append(tok)
+                logits, caches = self._decode(
+                    self.params, caches, tok[:, None], jnp.int32(S + i))
+                tok, rng = self._sample(logits, rng, top_k)
         return np.stack([np.asarray(t) for t in out], axis=1)
 
 
@@ -73,11 +104,14 @@ class MultiTaskEngine(ServeEngine):
     `param_list` are per-task param trees sharing every non-adapter leaf.
     Each generate() call takes per-request task ids; adapters are gathered
     per request and broadcast over the sequence inside apply_hadamard.
+    Adapter leaves are replicated by the sharding rules, so the gather is
+    collective-free under a mesh.
     """
 
     def __init__(self, cfg: ModelCfg, param_list):
         self.bank = build_bank(param_list)
         super().__init__(cfg, self.bank, fold=False)
+        self.bank = self.params  # mesh-placed bank
 
     def generate_for_tasks(self, tokens: np.ndarray, task_ids: np.ndarray,
                            max_new_tokens: int):

@@ -1,0 +1,36 @@
+"""Auto-loaded compat shims for running this repo from source.
+
+Python imports `sitecustomize` at interpreter startup from any sys.path
+entry, so every process launched with PYTHONPATH=src - including the
+subprocess-based distribution tests, which import `jax.sharding.AxisType`
+before any repro module - gets these shims for free.
+
+Shim: jax < 0.5 has no public `jax.sharding.AxisType` and its
+`jax.make_mesh` takes no `axis_types` kwarg. All call sites in this repo
+use AxisType.Auto for every axis, which is exactly the default semantics
+of standard jit + with_sharding_constraint on this jax version, so the
+wrapper accepts the kwarg and ignores it (wiring the half-landed
+experimental axis-type machinery here would change jit behavior).
+"""
+try:
+    import jax
+    import jax.sharding as _jsharding
+
+    if not hasattr(_jsharding, "AxisType"):
+        from jax._src.mesh import AxisTypes as _AxisTypes
+
+        if not hasattr(_AxisTypes, "Auto"):  # pragma: no cover
+            raise AttributeError("jax._src.mesh.AxisTypes has no Auto")
+        _jsharding.AxisType = _AxisTypes
+
+        _orig_make_mesh = jax.make_mesh
+
+        def _make_mesh(axis_shapes, axis_names, *, devices=None,
+                       axis_types=None):
+            del axis_types  # Auto everywhere == this version's default
+            return _orig_make_mesh(axis_shapes, axis_names, devices=devices)
+
+        _make_mesh.__doc__ = _orig_make_mesh.__doc__
+        jax.make_mesh = _make_mesh
+except Exception:  # never break interpreter startup over a shim
+    pass
