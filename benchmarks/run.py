@@ -1,13 +1,19 @@
 """Benchmark entrypoint: one harness per paper table/figure + kernels +
-roofline. Prints ``name,us_per_call,derived`` CSV rows.
+roofline. Prints ``name,us_per_call,derived`` CSV rows; ``--json`` also
+writes the rows as a machine-readable file (the CI bench lane uploads it
+as an artifact, giving the repo a bench trajectory across commits).
 
   PYTHONPATH=src python -m benchmarks.run            # fast (minutes, CPU)
   PYTHONPATH=src python -m benchmarks.run --full     # paper-scale budgets
   PYTHONPATH=src python -m benchmarks.run --only table3,roofline
+  PYTHONPATH=src python -m benchmarks.run --only table3,kernels \
+      --json results/BENCH_ci.json
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 import traceback
@@ -20,11 +26,16 @@ def main() -> None:
     ap.add_argument("--only", default="",
                     help="comma-separated subset of: table2,table3,table4,"
                          "table5,fig5,kernels,roofline")
+    ap.add_argument("--json", default="",
+                    help="write rows as JSON: {suites: {name: [{name, "
+                         "us_per_call, derived}]}} plus run metadata")
     args = ap.parse_args()
     fast = not args.full
     only = set(filter(None, args.only.split(",")))
 
-    from benchmarks import (fig5_patterns, kernel_bench, roofline,
+    import jax
+
+    from benchmarks import (common, fig5_patterns, kernel_bench, roofline,
                             table2_two_stage, table3_param_counts,
                             table4_module_ablation, table5_layer_sweep)
 
@@ -38,19 +49,50 @@ def main() -> None:
         ("fig5", fig5_patterns.run),
     ]
 
+    unknown = only - {name for name, _ in suites}
+    if unknown:
+        ap.error(f"unknown --only suites: {sorted(unknown)} "
+                 f"(known: {sorted(name for name, _ in suites)})")
+
     failures = []
+    per_suite = {}
     t0 = time.time()
     for name, fn in suites:
         if only and name not in only:
             continue
         print(f"\n=== {name} ===", flush=True)
+        start = len(common.ROWS)
         try:
             fn(fast=fast)
         except Exception:
             failures.append(name)
             traceback.print_exc()
-    print(f"\n# benchmarks done in {time.time() - t0:.0f}s; "
+        per_suite[name] = [
+            {"name": r["name"], "us_per_call": r["us"], "derived": r["derived"]}
+            for r in common.ROWS[start:]
+        ]
+    elapsed = time.time() - t0
+    print(f"\n# benchmarks done in {elapsed:.0f}s; "
           f"failures: {failures or 'none'}")
+
+    if args.json:
+        payload = {
+            "schema": "repro-bench-v1",
+            "created_unix": time.time(),
+            "backend": jax.default_backend(),
+            "fast": fast,
+            "elapsed_s": elapsed,
+            "failures": failures,
+            "suites": per_suite,
+        }
+        out_dir = os.path.dirname(args.json)
+        if out_dir:
+            os.makedirs(out_dir, exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {sum(map(len, per_suite.values()))} rows "
+              f"to {args.json}")
+
     if failures:
         sys.exit(1)
 

@@ -7,6 +7,8 @@ Demonstrates:
   * training two tiny task adapters (same frozen backbone),
   * building the stacked bank + batched per-request adapter selection,
   * adapter folding into W_O for zero-overhead single-task serving,
+  * continuous-batching: a stream of mixed-task requests through the
+    slot-based scheduler, admitted mid-decode as slots free up,
   * the size math: each extra task costs KBs, not a model copy.
 """
 import time
@@ -21,6 +23,7 @@ from repro.core import peft
 from repro.core.hadamard import extract_delta
 from repro.data.synthetic import TaskData
 from repro.serving.engine import MultiTaskEngine, ServeEngine
+from repro.serving.scheduler import Request, Scheduler
 from repro.train.loop import two_stage_finetune
 from repro.train.pretrain import pretrain_encoder
 
@@ -41,16 +44,11 @@ def main():
     key = jax.random.PRNGKey(0)
     base = M.init_params(key, cfg)
 
-    # stand-ins for two fine-tuned tasks: adapters shifted differently
-    def tuned(task_id):
-        def perturb(path, v):
-            if "/adapter/" in path:
-                k = jax.random.fold_in(key, task_id * 1000 + abs(hash(path)) % 997)
-                return v + 0.2 * jax.random.normal(k, v.shape, v.dtype)
-            return v
-        return tu.map_with_path(perturb, base)
+    # stand-ins for three fine-tuned tasks: adapters shifted differently
+    from repro.core.hadamard import perturb_adapters
 
-    tasks = [tuned(1), tuned(2), tuned(3)]
+    tasks = [perturb_adapters(base, jax.random.fold_in(key, t), scale=0.2)
+             for t in (1, 2, 3)]
     deltas = [extract_delta(p) for p in tasks]
     print(f"adapter delta per task: {tu.tree_bytes(deltas[0])/1024:.1f} KiB "
           f"(backbone: {tu.tree_bytes(base)/2**20:.1f} MiB)")
@@ -80,6 +78,23 @@ def main():
     assert (a == b).all()
     print("fold_adapter(W_O) serving verified: identical tokens, zero "
           "adapter FLOPs at inference")
+
+    # --- continuous batching: more requests than slots, mixed tasks ---
+    sched = Scheduler(engine, num_slots=2, max_len=24)
+    stream = [Request(prompt=prompts[i], max_new_tokens=3 + i % 3,
+                      task_id=i % 3) for i in range(6)]
+    done, report = sched.run(stream)
+    for c in done:
+        # every request must match the lock-step engine run for its task
+        ref = engine.generate_for_tasks(
+            prompts[c.request_id:c.request_id + 1],
+            np.array([c.task_id]), len(c.tokens))
+        assert (c.tokens == ref[0]).all()
+    print(f"continuous batching (2 slots, 6 mixed-task requests): "
+          f"{report['tokens']} tokens in {report['ticks']} ticks, "
+          f"{report['tokens_per_s']:.1f} tok/s, "
+          f"mean ttft {report['mean_ttft_s'] * 1e3:.0f}ms - "
+          f"token-parity with the static engine verified")
 
 
 if __name__ == "__main__":

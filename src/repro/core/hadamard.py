@@ -134,6 +134,23 @@ def select_tasks(bank_params, task_ids):
     return tu.map_with_path(sel, bank_params)
 
 
+def perturb_adapters(params, key, scale: float = 0.05):
+    """Synthesize a 'fine-tuned' task variant: shift every Hadamard adapter
+    leaf by scale * N(0, 1) under a per-leaf deterministic key (crc32 of
+    the path - str hash() is salted per process). Demo/benchmark helper
+    for building multi-task banks without running real fine-tunes.
+    """
+    import zlib
+
+    def one(path, leaf):
+        if re.search(r"/adapter/(w|b)$", path):
+            k = jax.random.fold_in(key, zlib.crc32(path.encode()))
+            return leaf + scale * jax.random.normal(k, leaf.shape, leaf.dtype)
+        return leaf
+
+    return tu.map_with_path(one, params)
+
+
 # ---------------------------------------------------------------------------
 # Introspection helpers
 # ---------------------------------------------------------------------------

@@ -202,3 +202,36 @@ def cache_shardings(caches, cfg, mesh):
         return NamedSharding(mesh, cache_spec(path, shape, cfg, mesh))
 
     return tu.map_with_path(one, caches)
+
+
+# ---------------------------------------------------------------------------
+# Slot-pool caches (continuous-batching scheduler)
+# ---------------------------------------------------------------------------
+
+
+def slot_cache_spec(path: str, shape: Sequence[int], cfg, mesh) -> P:
+    """PartitionSpec for one slot-pool cache leaf.
+
+    The pool's slot dim (axis 1 of stacked (repeats, num_slots, ...)
+    leaves) is NOT a data-parallel batch: slots are admitted and retired
+    one at a time, out of order, by host-side scatters. Sharding it over
+    the dp axes would turn every admission into a resharding collective
+    and tie num_slots to the mesh shape, so it stays replicated. Model
+    parallelism on the kv-head/head dims applies exactly as in
+    `cache_spec` - the decode gather stays local.
+    """
+    entries = list(cache_spec(path, shape, cfg, mesh))
+    while len(entries) < len(shape):
+        entries.append(None)
+    if len(entries) >= 2:
+        entries[1] = None  # slot dim: replicated
+    return P(*entries)
+
+
+def slot_cache_shardings(caches, cfg, mesh):
+    """Map a slot-pool cache tree to NamedShardings via `slot_cache_spec`."""
+    def one(path, leaf):
+        shape = getattr(leaf, "shape", ())
+        return NamedSharding(mesh, slot_cache_spec(path, shape, cfg, mesh))
+
+    return tu.map_with_path(one, caches)

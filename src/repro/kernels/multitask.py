@@ -8,6 +8,8 @@ adapter tensors in HBM.
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
@@ -21,8 +23,16 @@ def _kernel(tids_ref, x_ref, w_ref, b_ref, o_ref):
     o_ref[0] = (x * w[None, :] + b[None, :]).astype(o_ref.dtype)
 
 
-def multitask_hadamard_tpu(x, w_bank, b_bank, task_ids, *, interpret: bool = True):
-    """x: (B,S,d); banks: (T,d); task_ids: (B,) int32."""
+def multitask_hadamard_tpu(x, w_bank, b_bank, task_ids, *,
+                           interpret: Optional[bool] = None):
+    """x: (B,S,d); banks: (T,d); task_ids: (B,) int32.
+
+    interpret=None (default) detects the backend: compiled on TPU,
+    interpreter elsewhere. Pass an explicit bool to override (tests force
+    True; a TPU run that wants the interpreter for debugging may too).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     B, S, d = x.shape
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,

@@ -1,8 +1,16 @@
-"""Serving launcher: batched greedy generation on a (reduced) config,
+"""Serving launcher: continuous-batching generation on a (reduced) config,
 optionally with per-request multi-task Hadamard adapters.
 
+Requests arrive with staggered prompt lengths, budgets and task ids; the
+scheduler admits them into `--num-slots` KV-cache slots mid-decode and
+retires them as they finish, printing a throughput/latency report
+(requests/s, tokens/s, mean time-to-first-token).
+
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
-      --batch 4 --prompt-len 16 --new-tokens 8 --tasks 3
+      --requests 8 --num-slots 4 --prompt-len 16 --new-tokens 8 --tasks 3
+
+`--static` falls back to the lock-step ServeEngine.generate batch (the
+pre-scheduler path, kept for A/B comparison).
 """
 from __future__ import annotations
 
@@ -14,21 +22,47 @@ import numpy as np
 
 from repro.configs import get, get_smoke
 from repro.core import peft
+from repro.core.hadamard import perturb_adapters
 from repro.dist.api import use_mesh
 from repro.launch.mesh import parse_mesh
 from repro.models import model as M
 from repro.serving.engine import MultiTaskEngine, ServeEngine
+from repro.serving.scheduler import Request, Scheduler
+
+
+def build_params(key, cfg, tasks: int):
+    """Backbone params, plus per-task adapter variants when tasks > 0
+    (distinct adapters per task, as if fine-tuned per task)."""
+    base = M.init_params(key, cfg)
+    if tasks <= 0:
+        return base, None
+    return base, [
+        perturb_adapters(base, jax.random.fold_in(key, 100 + t))
+        for t in range(tasks)
+    ]
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=8,
+                    help="number of requests to serve")
+    ap.add_argument("--num-slots", type=int, default=4,
+                    help="KV-cache slots (max concurrent requests)")
+    ap.add_argument("--prompt-len", type=int, default=16,
+                    help="max prompt length (requests are staggered below it)")
+    ap.add_argument("--new-tokens", type=int, default=8,
+                    help="max generation budget per request")
     ap.add_argument("--tasks", type=int, default=0,
-                    help=">0: multi-task adapter bank serving demo")
+                    help=">0: multi-task adapter bank serving")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help=">0: per-request top-k sampling (greedy otherwise)")
+    ap.add_argument("--stream", action="store_true",
+                    help="print every token the moment it is sampled")
+    ap.add_argument("--static", action="store_true",
+                    help="lock-step ServeEngine.generate batch instead of "
+                         "the continuous-batching scheduler")
     ap.add_argument("--fold", action="store_true",
                     help="fold the adapter into W_O (zero-overhead serving)")
     ap.add_argument("--mesh", default="",
@@ -41,43 +75,76 @@ def main():
     cfg = get_smoke(args.arch) if args.smoke else get(args.arch)
     cfg = peft.attach(cfg, peft.strategy("hadamard"))
     key = jax.random.PRNGKey(args.seed)
-    tokens = np.asarray(
-        jax.random.randint(key, (args.batch, args.prompt_len), 10,
-                           cfg.vocab_size))
+    base, variants = build_params(key, cfg, args.tasks)
 
-    if args.tasks > 0:
-        base = M.init_params(key, cfg)
-        variants = []
-        for t in range(args.tasks):
-            k = jax.random.fold_in(key, 100 + t)
-            v = jax.tree.map(lambda x: x, base)
-            # distinct per-task adapters (as if fine-tuned per task)
-            import re as _re
-            from repro.common import tree as tu
-            def perturb(path, leaf, k=k):
-                if _re.search(r"/adapter/(w|b)$", path):
-                    return leaf + 0.05 * jax.random.normal(
-                        jax.random.fold_in(k, abs(hash(path)) % 2**31),
-                        leaf.shape, leaf.dtype)
-                return leaf
-            variants.append(tu.map_with_path(perturb, v))
-        with use_mesh(mesh):  # engine captures the mesh; params placed sharded
+    with use_mesh(mesh):  # engine captures the mesh; params placed sharded
+        if variants is not None:
             engine = MultiTaskEngine(cfg, variants)
-        task_ids = np.arange(args.batch) % args.tasks
+        else:
+            engine = ServeEngine(cfg, base, fold=args.fold)
+
+    rs = np.random.RandomState(args.seed)
+    n = args.requests
+    if args.static:
+        tokens = np.asarray(jax.random.randint(
+            key, (n, args.prompt_len), 10, cfg.vocab_size))
         t0 = time.perf_counter()
-        out = engine.generate_for_tasks(tokens, task_ids, args.new_tokens)
+        if variants is not None:
+            task_ids = np.arange(n) % args.tasks
+            out = engine.generate_for_tasks(
+                tokens, task_ids, args.new_tokens,
+                rng=jax.random.PRNGKey(args.seed) if args.top_k else None,
+                top_k=args.top_k)
+        else:
+            out = engine.generate(
+                tokens, args.new_tokens,
+                rng=jax.random.PRNGKey(args.seed) if args.top_k else None,
+                top_k=args.top_k)
         dt = time.perf_counter() - t0
-        print(f"multi-task generate: tasks={task_ids.tolist()}")
-    else:
-        params = M.init_params(key, cfg)
-        with use_mesh(mesh):
-            engine = ServeEngine(cfg, params, fold=args.fold)
-        t0 = time.perf_counter()
-        out = engine.generate(tokens, args.new_tokens)
-        dt = time.perf_counter() - t0
-    tps = args.batch * args.new_tokens / dt
-    print(f"generated {out.shape} in {dt:.2f}s ({tps:.1f} tok/s)")
-    print(out[:, :8])
+        print(f"static batch: generated {out.shape} in {dt:.2f}s "
+              f"({n * args.new_tokens / dt:.1f} tok/s)")
+        print(out[:, :8])
+        return
+
+    # heterogeneous request stream: staggered prompt lengths and budgets
+    requests = []
+    for i in range(n):
+        plen = int(rs.randint(max(1, args.prompt_len // 2),
+                              args.prompt_len + 1))
+        budget = int(rs.randint(max(1, args.new_tokens // 2),
+                                args.new_tokens + 1))
+        requests.append(Request(
+            prompt=rs.randint(10, cfg.vocab_size, size=(plen,)),
+            max_new_tokens=budget,
+            top_k=args.top_k,
+            seed=args.seed + i,
+            task_id=i % args.tasks if args.tasks > 0 else 0,
+        ))
+
+    stream = None
+    if args.stream:
+        def stream(rid, tok):
+            print(f"  req{rid} += {tok}", flush=True)
+
+    # bucket prompt lengths where the config allows it so the staggered
+    # request stream doesn't compile one prefill per distinct length
+    max_len = args.prompt_len + args.new_tokens
+    sched = Scheduler(
+        engine, num_slots=args.num_slots, max_len=max_len, stream=stream,
+        prefill_bucket=8 if Scheduler.supports_bucketing(cfg) else None)
+    done, report = sched.run(requests)
+
+    for c in done:
+        print(f"req{c.request_id} task{c.task_id} prompt={c.prompt_len} "
+              f"-> {len(c.tokens)} tok ({c.finish_reason}, "
+              f"ttft {c.ttft_s * 1e3:.0f}ms): {c.tokens[:8].tolist()}")
+    print(f"served {report['requests']} requests / {report['tokens']} tokens "
+          f"in {report['elapsed_s']:.2f}s over {report['ticks']} ticks "
+          f"({args.num_slots} slots)")
+    print(f"throughput: {report['requests_per_s']:.1f} req/s, "
+          f"{report['tokens_per_s']:.1f} tok/s; "
+          f"mean ttft {report['mean_ttft_s'] * 1e3:.0f}ms, "
+          f"mean latency {report['mean_latency_s'] * 1e3:.0f}ms")
 
 
 if __name__ == "__main__":

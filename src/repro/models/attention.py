@@ -59,10 +59,15 @@ def attn_cache_shape(cfg: ModelCfg, slot: Slot, batch: int, cache_len: int):
 def ring_positions(size: int, pos):
     """Absolute positions held by each ring-buffer slot when the current
     write position is `pos` (slot i holds the latest p <= pos with
-    p % size == i). Slots never written map to INVALID_POS."""
+    p % size == i). Slots never written map to INVALID_POS.
+
+    pos may be a scalar -> (size,), or a (B,) vector of per-row write
+    positions (continuous batching) -> (B, size)."""
     i = jnp.arange(size)
-    p = pos - ((pos - i) % size)
-    return jnp.where(p < 0, INVALID_POS, p)
+    p = jnp.asarray(pos)[..., None]
+    p = p - ((p - i) % size)
+    out = jnp.where(p < 0, INVALID_POS, p)
+    return out if jnp.asarray(pos).ndim else out.reshape(size)
 
 
 # ---------------------------------------------------------------------------
@@ -142,7 +147,12 @@ def apply_attn(
         if cfg.qk_norm and "k_norm" in p and not is_cross:
             k = rms_head_norm(p["k_norm"], k, cfg.norm_eps)
         if cfg.pos == "rope" and not is_cross:
-            kpos = q_pos if write_pos is None else jnp.full((S,), write_pos, jnp.int32)
+            if write_pos is None:
+                kpos = q_pos
+            else:
+                wp = jnp.asarray(write_pos, jnp.int32)
+                # scalar: all rows write position wp; (B,): per-row positions
+                kpos = wp[:, None] if wp.ndim else jnp.full((S,), wp, jnp.int32)
             k = apply_rope(k, kpos, cfg.rope_theta)
         if adapter is not None and acfg.kind == "ia3":
             k = k * adapter["lk"].astype(cdt).reshape(KH, Dh)
@@ -171,17 +181,23 @@ def apply_attn(
         eff_len = k_att.shape[1]
     elif cache is not None and write_pos is not None:  # self-attn decode
         size = cache["k"].shape[1]
-        slot_idx = write_pos % size
-        ck = jax.lax.dynamic_update_slice_in_dim(
-            cache["k"], k.astype(cache["k"].dtype), slot_idx, axis=1)
-        cv = jax.lax.dynamic_update_slice_in_dim(
-            cache["v"], v.astype(cache["v"].dtype), slot_idx, axis=1)
+        wp = jnp.asarray(write_pos, jnp.int32)
+        slot_idx = wp % size
+        if wp.ndim:  # (B,) per-row write positions (continuous batching)
+            bidx = jnp.arange(B)
+            ck = cache["k"].at[bidx, slot_idx].set(k[:, 0].astype(cache["k"].dtype))
+            cv = cache["v"].at[bidx, slot_idx].set(v[:, 0].astype(cache["v"].dtype))
+        else:
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), slot_idx, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), slot_idx, axis=1)
         new_cache = {"k": ck, "v": cv}
         if slot.window is None:
             kv_pos = jnp.arange(size)
-            eff_len = write_pos + 1
+            eff_len = wp + 1  # scalar, or (B,) per-row valid lengths
         else:
-            kv_pos = ring_positions(size, write_pos)
+            kv_pos = ring_positions(size, wp)
             eff_len = INVALID_POS  # validity entirely via positions
         k_att, v_att = ck, cv
     elif cache_len is not None:  # self-attn prefill: build the cache

@@ -14,6 +14,11 @@ Shapes:
   kv_pos:   (Skv,) int32 absolute positions of the keys
   kv_len:   scalar int32 - number of valid kv entries (for decode caches)
 Returns:    (B, Sq, KH, G, D)
+
+Per-sequence positions (continuous batching): q_pos may be (B, Sq),
+kv_pos (B, Skv) and kv_len (B,) so every row of the batch attends at its
+own absolute position over its own valid cache prefix - the shape the
+slot-based decode tick in `repro.serving.scheduler` runs every step.
 """
 from __future__ import annotations
 
@@ -42,15 +47,26 @@ def _pad_to(x, size: int, axis: int):
 
 
 def _mask(q_pos, kv_pos, kv_len, causal: bool, window: Optional[int]):
-    """(Sq, Skv) bool validity mask."""
-    qp = q_pos[:, None]
-    kp = kv_pos[None, :]
-    m = kp < kv_len  # cache validity / padding
+    """Bool validity mask: (Sq, Skv), or (B, Sq, Skv) when any of q_pos
+    (B, Sq) / kv_pos (B, Skv) / kv_len (B,) carries a batch dim."""
+    qp = q_pos[..., :, None]
+    kp = kv_pos[..., None, :]
+    kl = jnp.asarray(kv_len)
+    if kl.ndim:
+        kl = kl[..., None, None]
+    m = kp < kl  # cache validity / padding
     if causal:
         m = m & (kp <= qp)
     if window is not None:
         m = m & (qp - kp < window)
     return m
+
+
+def _expand_mask(valid):
+    """Broadcast a (qc, kc) or (B, qc, kc) tile mask over (B, KH, G, qc, kc)."""
+    if valid.ndim == 2:
+        return valid[None, None, None]
+    return valid[:, None, None]
 
 
 def _tile_scores(q_i, k_j, scale, cap, tile_dtype=jnp.float32):
@@ -79,25 +95,31 @@ def _flash_fwd_impl(q, k, v, q_pos, kv_pos, kv_len, causal, window, scale, cap,
     kc = min(kv_chunk, Skv)
     nq, nk = _cdiv(Sq, qc), _cdiv(Skv, kc)
 
-    qp = _pad_to(q_pos, nq * qc, 0)
+    batched_pos = q_pos.ndim == 2 or kv_pos.ndim == 2
+    qp = _pad_to(q_pos, nq * qc, q_pos.ndim - 1)
     kp = jnp.where(
-        jnp.arange(nk * kc) < Skv, _pad_to(kv_pos, nk * kc, 0), jnp.iinfo(jnp.int32).max
+        jnp.arange(nk * kc) < Skv, _pad_to(kv_pos, nk * kc, kv_pos.ndim - 1),
+        jnp.iinfo(jnp.int32).max
     )
     q_r = _pad_to(q, nq * qc, 1).reshape(B, nq, qc, KH, G, D).transpose(1, 0, 2, 3, 4, 5)
     k_r = _pad_to(k, nk * kc, 1).reshape(B, nk, kc, KH, D).transpose(1, 0, 2, 3, 4)
     v_r = _pad_to(v, nk * kc, 1).reshape(B, nk, kc, KH, D).transpose(1, 0, 2, 3, 4)
-    qp_r = qp.reshape(nq, qc)
-    kp_r = kp.reshape(nk, kc)
+    # chunk-index-leading position tiles: (nq, qc) / (nq, B, qc) etc.
+    qp_r = (qp.reshape(B, nq, qc).transpose(1, 0, 2) if q_pos.ndim == 2
+            else qp.reshape(nq, qc))
+    kp_r = (kp.reshape(B, nk, kc).transpose(1, 0, 2) if kv_pos.ndim == 2
+            else kp.reshape(nk, kc))
 
     # Local-window fast path: each q chunk only ever sees keys in
     # [q_start - window + 1, q_end], i.e. at most n_win kv chunks. Slicing
     # that band (dynamic_slice with a traced start) turns O(S^2) local
     # attention into O(S*window): 16x fewer tiles for recurrentgemma's
-    # window-2048 layers at 32k prefill.
+    # window-2048 layers at 32k prefill. Requires one shared position per
+    # q chunk, so per-sequence (batched) positions take the generic path.
     n_win = nk
     if window is not None and causal:
         n_win = min(nk, _cdiv(window + qc - 1, kc) + 1)
-    use_band = n_win < nk
+    use_band = n_win < nk and not batched_pos
     k_flat = _pad_to(k, nk * kc, 1)
     v_flat = _pad_to(v, nk * kc, 1)
 
@@ -121,7 +143,7 @@ def _flash_fwd_impl(q, k, v, q_pos, kv_pos, kv_len, causal, window, scale, cap,
             k_j, v_j, kpos_j = kv
             s = _tile_scores(q_i, k_j, scale, cap, tile_dtype)
             valid = _mask(qpos_i, kpos_j, kv_len, causal, window)
-            s = jnp.where(valid[None, None, None], s, NEG_INF)
+            s = jnp.where(_expand_mask(valid), s, NEG_INF)
             m_new = jnp.maximum(m, s.max(axis=-1))
             p = jnp.exp(s - m_new[..., None])
             corr = jnp.exp(m - m_new)
@@ -169,9 +191,10 @@ def _flash_bwd_impl(res, g, causal, window, scale, cap, q_chunk, kv_chunk,
     g = g.astype(jnp.float32)
     delta = jnp.sum(g * out.astype(jnp.float32), axis=-1)  # (B,Sq,KH,G)
 
-    qp = _pad_to(q_pos, nq * qc, 0)
+    qp = _pad_to(q_pos, nq * qc, q_pos.ndim - 1)
     kp = jnp.where(
-        jnp.arange(nk * kc) < Skv, _pad_to(kv_pos, nk * kc, 0), jnp.iinfo(jnp.int32).max
+        jnp.arange(nk * kc) < Skv, _pad_to(kv_pos, nk * kc, kv_pos.ndim - 1),
+        jnp.iinfo(jnp.int32).max
     )
     q_r = _pad_to(q, nq * qc, 1).reshape(B, nq, qc, KH, G, D).transpose(1, 0, 2, 3, 4, 5)
     g_r = _pad_to(g, nq * qc, 1).reshape(B, nq, qc, KH, G, D).transpose(1, 0, 2, 3, 4, 5)
@@ -183,8 +206,10 @@ def _flash_bwd_impl(res, g, causal, window, scale, cap, q_chunk, kv_chunk,
     )
     k_r = _pad_to(k, nk * kc, 1).reshape(B, nk, kc, KH, D).transpose(1, 0, 2, 3, 4)
     v_r = _pad_to(v, nk * kc, 1).reshape(B, nk, kc, KH, D).transpose(1, 0, 2, 3, 4)
-    qp_r = qp.reshape(nq, qc)
-    kp_r = kp.reshape(nk, kc)
+    qp_r = (qp.reshape(B, nq, qc).transpose(1, 0, 2) if q_pos.ndim == 2
+            else qp.reshape(nq, qc))
+    kp_r = (kp.reshape(B, nk, kc).transpose(1, 0, 2) if kv_pos.ndim == 2
+            else kp.reshape(nk, kc))
 
     def tile_ds(q_i, k_j, qpos_i, kpos_j, lse_i, g_i, dl_i, v_j):
         """Recompute p for a tile and return (ds_raw, p)."""
@@ -194,7 +219,7 @@ def _flash_bwd_impl(res, g, causal, window, scale, cap, q_chunk, kv_chunk,
         ) * scale
         s = jnp.tanh(s_raw / cap) * cap if cap else s_raw
         valid = _mask(qpos_i, kpos_j, kv_len, causal, window)
-        s = jnp.where(valid[None, None, None], s, NEG_INF)
+        s = jnp.where(_expand_mask(valid), s, NEG_INF)
         p = jnp.exp(s - lse_i[..., None])  # (B,KH,G,qc,kc)
         dp = jnp.einsum("bqkgd,bskd->bkgqs", g_i.astype(tile_dtype),
                         v_j.astype(tile_dtype),
@@ -203,7 +228,7 @@ def _flash_bwd_impl(res, g, causal, window, scale, cap, q_chunk, kv_chunk,
         if cap:
             t = jnp.tanh(s_raw / cap)
             ds = ds * (1.0 - jnp.square(t))
-        ds = jnp.where(valid[None, None, None], ds, 0.0)
+        ds = jnp.where(_expand_mask(valid), ds, 0.0)
         return ds, p
 
     # --- dQ: iterate q chunks, accumulate over kv chunks ---

@@ -155,20 +155,33 @@ def forward_lm(params, cfg: ModelCfg, tokens, patches=None):
     return lm_logits(params, cfg, x), aux
 
 
-def prefill_lm(params, cfg: ModelCfg, tokens, cache_len: int, patches=None):
+def prefill_lm(params, cfg: ModelCfg, tokens, cache_len: int, patches=None,
+               last_pos=None):
+    """last_pos: position whose logits to return (default: the final one).
+    A traced last_pos lets right-padded prompts share one compiled shape
+    (prompt-length bucketing): under causal masking the pad suffix never
+    influences positions <= last_pos, and decode overwrites/masks the
+    padded cache entries before they are ever attended."""
     x = _decoder_embed(params, cfg, tokens, patches)
     q_pos = jnp.arange(x.shape[1])
     x, caches, _ = _run_groups(params, cfg, cfg.groups, "blocks", x,
                                q_pos=q_pos, causal=True, mode="prefill",
                                cache_len=cache_len)
-    x = apply_norm(params["final_norm"], cfg, x[:, -1:])
+    if last_pos is None:
+        x = x[:, -1:]
+    else:
+        x = jax.lax.dynamic_slice_in_dim(x, last_pos, 1, axis=1)
+    x = apply_norm(params["final_norm"], cfg, x)
     return lm_logits(params, cfg, x), caches
 
 
 def decode_lm(params, cfg: ModelCfg, caches, token, pos):
-    """One decode step. token: (B, 1) int32; pos: scalar int32."""
+    """One decode step. token: (B, 1) int32; pos: scalar int32 shared by
+    every row, or (B,) int32 per-row absolute positions (continuous
+    batching: each cache row is an independent request mid-sequence)."""
+    pos = jnp.asarray(pos, jnp.int32)
     x = embed_tokens(params, cfg, token)
-    q_pos = jnp.full((1,), pos, jnp.int32)
+    q_pos = pos[:, None] if pos.ndim else jnp.full((1,), pos, jnp.int32)
     x, caches, _ = _run_groups(params, cfg, cfg.groups, "blocks", x,
                                q_pos=q_pos, causal=True, mode="decode",
                                caches=caches, write_pos=pos)
@@ -245,8 +258,10 @@ def prefill_encdec(params, cfg: ModelCfg, frames, tokens, cache_len: int):
 
 
 def decode_encdec(params, cfg: ModelCfg, caches, token, pos):
-    x = embed_tokens(params, cfg, token, positions=jnp.full((1,), pos))
-    q_pos = jnp.full((1,), pos, jnp.int32)
+    """pos: scalar, or (B,) per-row positions (see decode_lm)."""
+    pos = jnp.asarray(pos, jnp.int32)
+    q_pos = pos[:, None] if pos.ndim else jnp.full((1,), pos, jnp.int32)
+    x = embed_tokens(params, cfg, token, positions=q_pos)
     x, caches, _ = _run_groups(params, cfg, cfg.groups, "blocks", x,
                                q_pos=q_pos, causal=True, mode="decode",
                                caches=caches, write_pos=pos)

@@ -23,7 +23,7 @@ import numpy as np
 from repro.common.types import ModelCfg
 from repro.core.hadamard import build_bank, fold_adapter, select_tasks
 from repro.dist.api import current_mesh, use_mesh
-from repro.dist.sharding import params_shardings
+from repro.dist.sharding import params_shardings, slot_cache_shardings
 from repro.models import model as M
 
 
@@ -51,6 +51,11 @@ class ServeEngine:
             lambda p, toks, cl: M.prefill_lm(p, cfg, toks, cache_len=cl),
             static_argnums=(2,),
         )
+        self._prefill_at = jax.jit(
+            lambda p, toks, cl, lp: M.prefill_lm(p, cfg, toks, cache_len=cl,
+                                                 last_pos=lp),
+            static_argnums=(2,),
+        )
         self._decode = jax.jit(
             lambda p, caches, tok, pos: M.decode_lm(p, cfg, caches, tok, pos),
             donate_argnums=(1,),
@@ -69,6 +74,36 @@ class ServeEngine:
         """Re-activate the engine's mesh so jit traces see its constraints
         (use_mesh(None) is a no-op for meshless engines)."""
         return use_mesh(self.mesh)
+
+    # -- scheduler hooks (continuous batching, see serving/scheduler.py) ----
+
+    def prefill(self, tokens, cache_len: int, task_ids=None, last_pos=None):
+        """(last-token logits, fresh caches) for same-length prompts.
+        task_ids is accepted for interface parity and ignored here;
+        last_pos selects which position's logits to return (prompt-length
+        bucketing: right-padded prompts pass their true last index)."""
+        with self._mesh_ctx():
+            if last_pos is None:
+                return self._prefill(self.params, jnp.asarray(tokens),
+                                     int(cache_len))
+            return self._prefill_at(self.params, jnp.asarray(tokens),
+                                    int(cache_len), jnp.int32(last_pos))
+
+    def decode_step(self, caches, tok, pos, task_ids=None):
+        """One fused decode step. pos may be a scalar or a (B,) vector of
+        per-row positions (the scheduler's per-slot tick)."""
+        with self._mesh_ctx():
+            return self._decode(self.params, caches, tok, pos)
+
+    def init_slot_caches(self, num_slots: int, cache_len: int):
+        """Zeroed slot-pool caches: row i is slot i's private cache region.
+        Under a mesh the pool is placed with the slot dim replicated so
+        per-slot admission scatters stay collective-free."""
+        caches = M.init_decode_caches(self.cfg, num_slots, cache_len)
+        if self.mesh is not None:
+            caches = jax.device_put(
+                caches, slot_cache_shardings(caches, self.cfg, self.mesh))
+        return caches
 
     # -- sampling -----------------------------------------------------------
 
@@ -112,13 +147,45 @@ class MultiTaskEngine(ServeEngine):
         self.bank = build_bank(param_list)
         super().__init__(cfg, self.bank, fold=False)
         self.bank = self.params  # mesh-placed bank
+        # Scheduler-tick variants: the bank gather happens INSIDE the jit so
+        # a fresh mix of task ids each tick re-gathers without re-placing
+        # params (the gather is collective-free: adapters are replicated).
+        self._prefill_tasks = jax.jit(
+            lambda bank, toks, tids, cl, lp: M.prefill_lm(
+                select_tasks(bank, tids), cfg, toks, cache_len=cl,
+                last_pos=lp),
+            static_argnums=(3,))
+        self._decode_tasks = jax.jit(
+            lambda bank, caches, tok, pos, tids: M.decode_lm(
+                select_tasks(bank, tids), cfg, caches, tok, pos),
+            donate_argnums=(1,))
+
+    def prefill(self, tokens, cache_len: int, task_ids=None, last_pos=None):
+        if task_ids is None:
+            # the bank's stacked adapter leaves are not runnable params
+            raise ValueError("MultiTaskEngine.prefill requires task_ids")
+        toks = jnp.asarray(tokens)
+        if last_pos is None:
+            last_pos = toks.shape[1] - 1
+        with self._mesh_ctx():
+            return self._prefill_tasks(
+                self.bank, toks, jnp.asarray(task_ids, jnp.int32),
+                int(cache_len), jnp.int32(last_pos))
+
+    def decode_step(self, caches, tok, pos, task_ids=None):
+        if task_ids is None:
+            raise ValueError("MultiTaskEngine.decode_step requires task_ids")
+        with self._mesh_ctx():
+            return self._decode_tasks(
+                self.bank, caches, tok, pos, jnp.asarray(task_ids, jnp.int32))
 
     def generate_for_tasks(self, tokens: np.ndarray, task_ids: np.ndarray,
-                           max_new_tokens: int):
+                           max_new_tokens: int,
+                           rng: Optional[jax.Array] = None, top_k: int = 0):
         params = select_tasks(self.bank, jnp.asarray(task_ids))
         saved = self.params
         self.params = params
         try:
-            return self.generate(tokens, max_new_tokens)
+            return self.generate(tokens, max_new_tokens, rng=rng, top_k=top_k)
         finally:
             self.params = saved

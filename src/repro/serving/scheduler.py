@@ -1,0 +1,306 @@
+"""Continuous-batching request scheduler over a slot-based KV cache pool.
+
+`ServeEngine.generate` is a lock-step static batch: every request must
+arrive together, share one sequence-length budget, and the batch ends when
+the longest request ends. Production traffic is nothing like that - this
+module is the repo's answer, the Hadamard analogue of multi-LoRA serving:
+one frozen (possibly mesh-sharded) backbone, a megabytes-sized bank of
+per-task adapters, and a stream of heterogeneous requests.
+
+Design (slot model):
+  * The scheduler owns `num_slots` cache slots - rows of one pooled decode
+    cache of length `max_len` (`engine.init_slot_caches`). Slot i's row is
+    its private cache region; every request's positions start at 0 within
+    its own row.
+  * Admission is prefill-on-admit: a queued request is prefilled (B=1,
+    cache_len=max_len) and its fresh cache row is scattered into the pool
+    at the free slot's index - one jitted `dynamic_update_slice` on the
+    slot axis, mid-decode, without touching other slots.
+  * Every tick runs ONE fused decode step across all slots with per-slot
+    position vectors (`decode_lm` with pos: (num_slots,)); each row
+    attends over its own valid prefix via per-row kv_len masking in
+    flash attention. Slots whose request carries a different task id are
+    routed through the adapter-bank gather inside the same jitted step
+    (`MultiTaskEngine.decode_step`), so heterogeneous tasks share every
+    tick.
+  * A slot retires the moment its request finishes (EOS or token budget)
+    and is immediately reusable for the next queued request; inactive
+    rows still flow through the fused step but their logits are ignored
+    and their cache rows are fully overwritten on the next admission.
+
+Greedy decoding is token-for-token identical to `ServeEngine.generate`
+for the same prompts: per-row ops are batch-invariant, so neither the
+B=1 prefill nor the fused per-slot tick changes any request's tokens.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.engine import sample_topk
+
+
+@dataclass
+class Request:
+    """One generation request; arrives whenever, carries its own budget
+    and sampling params, and (for MultiTaskEngine) its adapter task id."""
+
+    prompt: np.ndarray  # (S,) int32 prompt tokens
+    max_new_tokens: int
+    top_k: int = 0  # 0 -> greedy
+    temperature: float = 1.0
+    seed: Optional[int] = None  # rng seed for top-k sampling
+    task_id: int = 0  # adapter-bank row (MultiTaskEngine)
+    eos_id: Optional[int] = None  # stop early on this token
+
+
+@dataclass
+class Completion:
+    request_id: int
+    tokens: np.ndarray  # generated tokens (includes the EOS token, if any)
+    prompt_len: int
+    task_id: int
+    finish_reason: str  # 'eos' | 'length'
+    ttft_s: float  # submit -> first token (includes queueing)
+    latency_s: float  # submit -> finished
+
+
+@dataclass
+class _Slot:
+    request_id: int
+    req: Request
+    rng: Optional[jax.Array]
+    tokens: List[int] = field(default_factory=list)
+    next_tok: int = 0  # sampled, not yet fed through decode
+    pos: int = 0  # absolute position of the next decode write
+    submit_t: float = 0.0
+    first_tok_t: float = 0.0
+
+
+class Scheduler:
+    """Continuous-batching scheduler around a ServeEngine/MultiTaskEngine.
+
+    stream: optional callback `(request_id, token)` invoked for every
+    generated token the moment it is sampled.
+
+    prefill_bucket: when set, prompts are right-padded to the next multiple
+    of this bucket before prefill so arbitrary prompt lengths reuse a small
+    set of compiled shapes (otherwise each distinct length compiles its own
+    prefill). Token-exact, but only valid for full-attention configs - see
+    the check in __init__.
+    """
+
+    def __init__(self, engine, *, num_slots: int, max_len: int,
+                 stream: Optional[Callable[[int, int], None]] = None,
+                 prefill_bucket: Optional[int] = None):
+        if num_slots < 1:
+            raise ValueError("num_slots must be >= 1")
+        if prefill_bucket is not None and not self.supports_bucketing(
+                engine.cfg):
+            raise ValueError(
+                "prefill_bucket requires full-attention slots (windowed "
+                "ring caches and recurrent/rwkv state would fold the pad "
+                "tokens in)")
+        self.engine = engine
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.stream = stream
+        self.prefill_bucket = prefill_bucket
+        self.caches = engine.init_slot_caches(num_slots, max_len)
+        self.slots: List[Optional[_Slot]] = [None] * num_slots
+        self.queue: deque = deque()
+        self.completions: Dict[int, Completion] = {}
+        self._next_id = 0
+        self._ticks = 0
+        # per-slot vectors fed to the fused decode step every tick
+        self._tok = np.zeros((num_slots,), np.int32)
+        self._pos = np.zeros((num_slots,), np.int32)
+        self._task = np.zeros((num_slots,), np.int32)
+        # one trace for every slot index: slot is a traced scalar
+        self._admit = jax.jit(
+            lambda pool, row, slot: jax.tree.map(
+                lambda a, b: jax.lax.dynamic_update_slice_in_dim(
+                    a, b.astype(a.dtype), slot, axis=1),
+                pool, row),
+            donate_argnums=(0,))
+
+    @staticmethod
+    def supports_bucketing(cfg) -> bool:
+        """Whether prompt-length bucketing is token-exact for this config.
+        Bucketing right-pads prompts so prefill compiles one shape per
+        bucket instead of one per distinct prompt length; that is correct
+        only for full (non-windowed) attention caches, where the pad
+        suffix is causally invisible at prefill and decode overwrites
+        position p's cache entry before kv_len ever unmasks it."""
+        return all(s.kind == "attn" and s.window is None
+                   for g in cfg.groups for s in g.slots)
+
+    # -- request lifecycle --------------------------------------------------
+
+    def submit(self, req: Request) -> int:
+        """Queue a request; returns its id. Admission happens on the next
+        tick that has a free slot."""
+        if req.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        S = int(np.asarray(req.prompt).shape[-1])
+        if S + req.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"prompt_len {S} + max_new_tokens {req.max_new_tokens} "
+                f"exceeds slot cache length {self.max_len}")
+        rid = self._next_id
+        self._next_id += 1
+        self.queue.append((rid, req, time.perf_counter()))
+        return rid
+
+    @property
+    def active(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    @property
+    def pending(self) -> int:
+        return len(self.queue)
+
+    def _sample_one(self, logits_row, st: _Slot) -> int:
+        """One request's sampling decision (logits_row: (1, 1, V))."""
+        if st.req.top_k and st.rng is not None:
+            st.rng, sub = jax.random.split(st.rng)
+            return int(sample_topk(logits_row, sub, k=st.req.top_k,
+                                   temperature=st.req.temperature)[0])
+        return int(jnp.argmax(logits_row[:, -1], axis=-1)[0])
+
+    def _emit(self, slot_idx: int, st: _Slot, tok: int) -> bool:
+        """Record one generated token; returns True if the request is done."""
+        if not st.tokens:
+            st.first_tok_t = time.perf_counter()
+        st.tokens.append(tok)
+        if self.stream is not None:
+            self.stream(st.request_id, tok)
+        if st.req.eos_id is not None and tok == st.req.eos_id:
+            self._retire(slot_idx, st, "eos")
+            return True
+        if len(st.tokens) >= st.req.max_new_tokens:
+            self._retire(slot_idx, st, "length")
+            return True
+        return False
+
+    def _retire(self, slot_idx: int, st: _Slot, reason: str):
+        now = time.perf_counter()
+        self.completions[st.request_id] = Completion(
+            request_id=st.request_id,
+            tokens=np.asarray(st.tokens, np.int32),
+            prompt_len=int(np.asarray(st.req.prompt).shape[-1]),
+            task_id=st.req.task_id,
+            finish_reason=reason,
+            ttft_s=st.first_tok_t - st.submit_t,
+            latency_s=now - st.submit_t,
+        )
+        self.slots[slot_idx] = None  # immediately reusable
+
+    def _admit_one(self, slot_idx: int, rid: int, req: Request,
+                   submit_t: float):
+        prompt = np.asarray(req.prompt, np.int32).reshape(1, -1)
+        S = prompt.shape[1]
+        last_pos = None
+        if self.prefill_bucket is not None:
+            padded = min(self.max_len,
+                         -(-S // self.prefill_bucket) * self.prefill_bucket)
+            if padded > S:
+                prompt = np.pad(prompt, ((0, 0), (0, padded - S)))
+            last_pos = S - 1
+        logits, fresh = self.engine.prefill(
+            prompt, self.max_len, task_ids=np.asarray([req.task_id]),
+            last_pos=last_pos)
+        self.caches = self._admit(self.caches, fresh, jnp.int32(slot_idx))
+        rng = (jax.random.PRNGKey(req.seed if req.seed is not None else rid)
+               if req.top_k else None)
+        st = _Slot(request_id=rid, req=req, rng=rng, pos=S,
+                   submit_t=submit_t)
+        self.slots[slot_idx] = st
+        st.next_tok = self._sample_one(logits, st)
+        self._task[slot_idx] = req.task_id
+        if not self._emit(slot_idx, st, st.next_tok):
+            self._tok[slot_idx] = st.next_tok
+            self._pos[slot_idx] = st.pos
+
+    # -- the tick -----------------------------------------------------------
+
+    def step(self) -> int:
+        """One scheduler tick: admit into free slots, then one fused decode
+        step across all occupied slots. Returns the number of tokens
+        generated this tick."""
+        # admissions (a request finishing at its first token frees the
+        # slot again, so keep admitting until slots or queue run out)
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        while free and self.queue:
+            idx = free.pop()
+            rid, req, submit_t = self.queue.popleft()
+            self._admit_one(idx, rid, req, submit_t)
+            if self.slots[idx] is None:
+                free.append(idx)
+
+        occupied = [i for i, s in enumerate(self.slots) if s is not None]
+        if not occupied:
+            return 0
+
+        logits, self.caches = self.engine.decode_step(
+            self.caches, jnp.asarray(self._tok[:, None]),
+            jnp.asarray(self._pos), task_ids=self._task.copy())
+        self._ticks += 1
+        # one fused argmax covers every greedy slot; sampled slots draw
+        # from their own rng stream individually
+        any_greedy = any(not (self.slots[i].req.top_k
+                              and self.slots[i].rng is not None)
+                         for i in occupied)
+        greedy = (np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+                  if any_greedy else None)
+
+        produced = 0
+        for i in occupied:
+            st = self.slots[i]
+            st.pos += 1
+            if st.req.top_k and st.rng is not None:
+                tok = self._sample_one(logits[i:i + 1], st)
+            else:
+                tok = int(greedy[i])
+            st.next_tok = tok
+            produced += 1
+            if not self._emit(i, st, tok):
+                self._tok[i] = tok
+                self._pos[i] = st.pos
+        return produced
+
+    # -- batch driver -------------------------------------------------------
+
+    def run(self, requests: List[Request]):
+        """Submit `requests`, tick until drained, and return
+        (completions ordered by request id, throughput/latency report).
+        Reusable: each call reports only its own ticks and pops its own
+        completions (callers driving submit()/step() directly should pop
+        from `self.completions` likewise to keep it bounded)."""
+        t0 = time.perf_counter()
+        ticks0 = self._ticks
+        ids = [self.submit(r) for r in requests]
+        while self.queue or self.active:
+            self.step()
+        elapsed = time.perf_counter() - t0
+        done = [self.completions.pop(i) for i in ids]
+        n_tok = sum(len(c.tokens) for c in done)
+        report = {
+            "requests": len(done),
+            "tokens": n_tok,
+            "elapsed_s": elapsed,
+            "ticks": self._ticks - ticks0,
+            "requests_per_s": len(done) / elapsed if elapsed else 0.0,
+            "tokens_per_s": n_tok / elapsed if elapsed else 0.0,
+            "mean_ttft_s": (sum(c.ttft_s for c in done) / len(done)
+                            if done else 0.0),
+            "mean_latency_s": (sum(c.latency_s for c in done) / len(done)
+                               if done else 0.0),
+        }
+        return done, report

@@ -1,0 +1,188 @@
+"""Continuous-batching scheduler behaviour: greedy parity with the static
+engine (including admissions into freed slots mid-decode), slot reuse with
+more requests than slots, heterogeneous task ids sharing one decode tick,
+EOS retirement, and the sampling plumbing the scheduler relies on.
+"""
+import jax
+import numpy as np
+import pytest
+
+from conftest import tiny_cfg
+from repro.common import tree as tu
+from repro.common.types import AdapterCfg, Group, Slot
+from repro.models import model as M
+from repro.serving.engine import MultiTaskEngine, ServeEngine
+from repro.serving.scheduler import Request, Scheduler
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _engine(**kw):
+    cfg = tiny_cfg(adapter=AdapterCfg(kind="hadamard"), **kw)
+    return ServeEngine(cfg, M.init_params(KEY, cfg)), cfg
+
+
+def test_scheduler_greedy_parity_with_static_engine():
+    """Token-for-token equal to ServeEngine.generate for the same prompts -
+    with num_slots < num_requests, so later requests are admitted into
+    slots freed mid-decode and every step mixes requests at different
+    positions."""
+    eng, _ = _engine()
+    toks = np.asarray(jax.random.randint(KEY, (5, 8), 0, 97))
+    want = eng.generate(toks, 6)
+
+    sched = Scheduler(eng, num_slots=2, max_len=20)
+    done, report = sched.run(
+        [Request(prompt=toks[i], max_new_tokens=6) for i in range(5)])
+
+    assert [c.request_id for c in done] == list(range(5))
+    for i, c in enumerate(done):
+        np.testing.assert_array_equal(c.tokens, want[i], err_msg=f"req{i}")
+    assert report["requests"] == 5 and report["tokens"] == 30
+    # 2 slots x 5 requests of 6 tokens each cannot finish in 6 lock-step
+    # ticks: the run really was time-multiplexed over the slot pool
+    assert report["ticks"] > 6
+
+
+def test_scheduler_parity_with_local_window():
+    """Per-slot ring-buffer decode (windowed attention) stays token-exact."""
+    eng, _ = _engine(groups=(Group((Slot("attn", window=6),), 2),))
+    toks = np.asarray(jax.random.randint(KEY, (3, 8), 0, 97))
+    want = eng.generate(toks, 6)
+
+    sched = Scheduler(eng, num_slots=2, max_len=20)
+    done, _ = sched.run(
+        [Request(prompt=toks[i], max_new_tokens=6) for i in range(3)])
+    for i, c in enumerate(done):
+        np.testing.assert_array_equal(c.tokens, want[i], err_msg=f"req{i}")
+
+
+def test_slot_reuse_more_requests_than_slots():
+    """Admit 7 requests into 2 slots with heterogeneous prompt lengths and
+    budgets: all must complete with exactly their own budget."""
+    eng, _ = _engine()
+    rs = np.random.RandomState(3)
+    reqs = [
+        Request(prompt=rs.randint(0, 97, size=(3 + i % 4,)),
+                max_new_tokens=1 + i % 5)
+        for i in range(7)
+    ]
+    sched = Scheduler(eng, num_slots=2, max_len=16)
+    done, report = sched.run(reqs)
+
+    assert len(done) == 7
+    for i, c in enumerate(done):
+        assert len(c.tokens) == reqs[i].max_new_tokens, i
+        assert c.prompt_len == len(reqs[i].prompt)
+        assert c.finish_reason == "length"
+        assert c.ttft_s >= 0 and c.latency_s >= c.ttft_s
+    assert report["requests"] == 7
+    assert report["tokens"] == sum(r.max_new_tokens for r in reqs)
+
+
+def test_mixed_task_tick():
+    """Requests with different task ids share every decode tick; each must
+    get its own adapter (parity with a dedicated single-task engine)."""
+    cfg = tiny_cfg(adapter=AdapterCfg(kind="hadamard"))
+    p0 = M.init_params(KEY, cfg)
+    p1 = tu.map_with_path(
+        lambda path, v: v + 0.5 if "adapter/b" in path else v, p0)
+    toks = np.asarray(jax.random.randint(KEY, (4, 8), 0, 97))
+    want0 = ServeEngine(cfg, p0).generate(toks, 5)
+    want1 = ServeEngine(cfg, p1).generate(toks, 5)
+
+    eng = MultiTaskEngine(cfg, [p0, p1])
+    sched = Scheduler(eng, num_slots=3, max_len=16)
+    done, _ = sched.run(
+        [Request(prompt=toks[i], max_new_tokens=5, task_id=i % 2)
+         for i in range(4)])
+    for i, c in enumerate(done):
+        want = (want0 if i % 2 == 0 else want1)[i]
+        np.testing.assert_array_equal(c.tokens, want, err_msg=f"req{i}")
+
+
+def test_eos_retires_slot_early():
+    eng, _ = _engine()
+    toks = np.asarray(jax.random.randint(KEY, (1, 8), 0, 97))
+    want = eng.generate(toks, 6)[0]
+    eos = int(want[2])
+
+    sched = Scheduler(eng, num_slots=1, max_len=20)
+    done, _ = sched.run(
+        [Request(prompt=toks[0], max_new_tokens=6, eos_id=eos)])
+    assert done[0].finish_reason == "eos"
+    np.testing.assert_array_equal(done[0].tokens, want[:3])
+
+
+def test_submit_rejects_over_budget_prompt():
+    eng, _ = _engine()
+    sched = Scheduler(eng, num_slots=1, max_len=8)
+    with pytest.raises(ValueError, match="exceeds slot cache length"):
+        sched.submit(Request(prompt=np.zeros(6, np.int32), max_new_tokens=4))
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        sched.submit(Request(prompt=np.zeros(2, np.int32), max_new_tokens=0))
+
+
+def test_prefill_bucketing_token_exact():
+    """Right-padded bucketed prefill must not change a single token, for
+    prompts both below and exactly at the bucket boundary."""
+    eng, _ = _engine()
+    rs = np.random.RandomState(5)
+    prompts = [rs.randint(0, 97, size=(n,)) for n in (3, 5, 8, 11)]
+    want = [eng.generate(p.reshape(1, -1), 5)[0] for p in prompts]
+
+    sched = Scheduler(eng, num_slots=2, max_len=20, prefill_bucket=8)
+    done, _ = sched.run(
+        [Request(prompt=p, max_new_tokens=5) for p in prompts])
+    for i, c in enumerate(done):
+        np.testing.assert_array_equal(c.tokens, want[i], err_msg=f"req{i}")
+
+
+def test_prefill_bucketing_rejects_windowed_configs():
+    eng, _ = _engine(groups=(Group((Slot("attn", window=6),), 2),))
+    with pytest.raises(ValueError, match="full-attention"):
+        Scheduler(eng, num_slots=1, max_len=16, prefill_bucket=8)
+
+
+def test_scheduler_topk_sampling_deterministic_per_seed():
+    """Per-request rng: same seed -> same continuation, independent of
+    which slot the request lands in or what else shares the batch."""
+    eng, _ = _engine()
+    toks = np.asarray(jax.random.randint(KEY, (3, 8), 0, 97))
+
+    def sample(order):
+        sched = Scheduler(eng, num_slots=2, max_len=20)
+        done, _ = sched.run(
+            [Request(prompt=toks[i], max_new_tokens=5, top_k=40, seed=7 + i)
+             for i in order])
+        return {tuple(toks[order[j]]): tuple(c.tokens)
+                for j, c in enumerate(done)}
+
+    a = sample([0, 1, 2])
+    b = sample([2, 1, 0])  # different slot assignment + batch mix
+    assert a == b
+
+
+def test_generate_for_tasks_plumbs_sampling():
+    """Regression: MultiTaskEngine.generate_for_tasks used to drop
+    rng/top_k (multi-task serving was greedy-only)."""
+    cfg = tiny_cfg(adapter=AdapterCfg(kind="hadamard"))
+    p0 = M.init_params(KEY, cfg)
+    p1 = tu.map_with_path(
+        lambda path, v: v + 0.5 if "adapter/b" in path else v, p0)
+    eng = MultiTaskEngine(cfg, [p0, p1])
+    toks = np.asarray(jax.random.randint(KEY, (2, 8), 0, 97))
+    tids = np.array([0, 1])
+
+    firsts = {
+        tuple(np.asarray(eng.generate_for_tasks(
+            toks, tids, 2, rng=jax.random.PRNGKey(s), top_k=40)).ravel())
+        for s in range(8)
+    }
+    assert len(firsts) > 1  # greedy-only would collapse to one outcome
+
+    a = eng.generate_for_tasks(toks, tids, 4, rng=jax.random.PRNGKey(5),
+                               top_k=40)
+    b = eng.generate_for_tasks(toks, tids, 4, rng=jax.random.PRNGKey(5),
+                               top_k=40)
+    np.testing.assert_array_equal(a, b)
