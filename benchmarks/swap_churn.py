@@ -1,0 +1,103 @@
+"""Hot-swap churn: scheduler throughput under adapter-bank eviction
+pressure.
+
+The question this answers: what does multi-tenancy COST? Three runs over
+the same request stream (tenants round-robined across requests):
+
+  * `static`  - all tenants resident in a frozen build_bank bank (the
+    pre-registry engine): the no-lifecycle upper bound.
+  * `warm`    - hot-swap bank with a row per tenant: every request after
+    the first pass hits a resident row (registry loads only on first
+    touch).
+  * `churn`   - bank rows = half the tenants: the round-robin stream is
+    an adversarial LRU workload where nearly every admission misses,
+    loads the delta from disk, and scatters it into an evicted row.
+
+The spread between `warm` and `churn` tok/s is the price of each
+disk-load + row-insert on the serving path; `insert_traces`/decode
+retraces staying at 1 is the invariant that keeps that price flat.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import record
+
+
+def _serve(engine, prompts, budgets, names_or_ids, *, named: bool,
+           num_slots: int, max_len: int):
+    from repro.serving.scheduler import Request, Scheduler
+
+    reqs = []
+    for i, p in enumerate(prompts):
+        kw = ({"adapter": names_or_ids[i]} if named
+              else {"task_id": names_or_ids[i]})
+        reqs.append(Request(prompt=p, max_new_tokens=budgets[i], **kw))
+    sched = Scheduler(engine, num_slots=num_slots, max_len=max_len)
+    t0 = time.perf_counter()
+    done, report = sched.run(reqs)
+    return done, report, time.perf_counter() - t0
+
+
+def run(fast: bool = True) -> None:
+    from repro.common.types import AdapterCfg, Group, ModelCfg, Slot
+    from repro.core.hadamard import extract_delta, perturb_adapters
+    from repro.models import model as M
+    from repro.serving.engine import MultiTaskEngine
+    from repro.serving.registry import AdapterBank, AdapterRegistry
+
+    tenants = 6 if fast else 12
+    n_req = 18 if fast else 96
+    plen, budget = (8, 6) if fast else (32, 16)
+    cfg = ModelCfg(
+        name="swap-bench", family="decoder", d_model=64, n_heads=4,
+        n_kv_heads=2, head_dim=16, d_ff=128, vocab_size=211,
+        groups=(Group((Slot("attn"),), 2),),
+        param_dtype="float32", compute_dtype="float32",
+        max_seq_len=plen + budget, adapter=AdapterCfg(kind="hadamard"),
+        q_chunk=8, kv_chunk=8, sequence_sharding=False)
+
+    key = jax.random.PRNGKey(0)
+    base = M.init_params(key, cfg)
+    variants = [perturb_adapters(base, jax.random.fold_in(key, t))
+                for t in range(tenants)]
+    rs = np.random.RandomState(0)
+    prompts = [rs.randint(10, cfg.vocab_size, size=(plen,))
+               for _ in range(n_req)]
+    budgets = [budget] * n_req
+    ids = [i % tenants for i in range(n_req)]
+    names = [f"tenant{i}" for i in ids]
+    max_len = plen + budget
+    num_slots = 4
+
+    with tempfile.TemporaryDirectory() as adir:
+        registry = AdapterRegistry(adir)
+        for t, params in enumerate(variants):
+            registry.publish(f"tenant{t}", extract_delta(params))
+
+        runs = [
+            ("static", MultiTaskEngine(cfg, variants), ids, False),
+            ("warm", MultiTaskEngine(
+                cfg, AdapterBank(cfg, base, tenants, registry)),
+             names, True),
+            ("churn", MultiTaskEngine(
+                cfg, AdapterBank(cfg, base, max(1, tenants // 2), registry)),
+             names, True),
+        ]
+        for label, engine, who, named in runs:
+            done, report, dt = _serve(
+                engine, prompts, budgets, who, named=named,
+                num_slots=num_slots, max_len=max_len)
+            bank = (engine.adapter_bank.stats()
+                    if engine.adapter_bank is not None
+                    else {"loads": 0, "evictions": 0})
+            record(
+                f"swap/{label}_b{tenants}",
+                dt / max(1, report["tokens"]) * 1e6,
+                f"{report['tokens_per_s']:.1f}tok/s "
+                f"loads={bank['loads']} evict={bank['evictions']} "
+                f"traces={engine.trace_counts['decode']}")

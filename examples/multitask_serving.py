@@ -9,8 +9,12 @@ Demonstrates:
   * adapter folding into W_O for zero-overhead single-task serving,
   * continuous-batching: a stream of mixed-task requests through the
     slot-based scheduler, admitted mid-decode as slots free up,
+  * multi-tenant hot-swap: tasks published to an on-disk AdapterRegistry,
+    served by NAME through a bounded device bank (LRU evict/reload,
+    zero decode retraces across swaps),
   * the size math: each extra task costs KBs, not a model copy.
 """
+import tempfile
 import time
 
 import jax
@@ -23,6 +27,7 @@ from repro.core import peft
 from repro.core.hadamard import extract_delta
 from repro.data.synthetic import TaskData
 from repro.serving.engine import MultiTaskEngine, ServeEngine
+from repro.serving.registry import AdapterBank, AdapterRegistry
 from repro.serving.scheduler import Request, Scheduler
 from repro.train.loop import two_stage_finetune
 from repro.train.pretrain import pretrain_encoder
@@ -95,6 +100,31 @@ def main():
           f"{report['tokens_per_s']:.1f} tok/s, "
           f"mean ttft {report['mean_ttft_s'] * 1e3:.0f}ms - "
           f"token-parity with the static engine verified")
+
+    # --- multi-tenant hot-swap: registry + bounded device bank ---
+    # Tenants outnumber bank rows 3:2, so serving the stream forces
+    # evict/reload churn; every completion must still match the static
+    # bank, and the decode tick must never retrace across swaps.
+    with tempfile.TemporaryDirectory() as adir:
+        registry = AdapterRegistry(adir)
+        for t, params in enumerate(tasks):
+            registry.publish(f"tenant{t}", extract_delta(params))
+        hot = MultiTaskEngine(cfg, AdapterBank(cfg, base, 2, registry))
+        hsched = Scheduler(hot, num_slots=2, max_len=24)
+        done, _ = hsched.run(
+            [Request(prompt=prompts[i], max_new_tokens=4,
+                     adapter=f"tenant{i % 3}") for i in range(6)])
+        for c in done:
+            ref = engine.generate_for_tasks(
+                prompts[c.request_id:c.request_id + 1],
+                np.array([int(c.adapter[-1])]), len(c.tokens))
+            assert (c.tokens == ref[0]).all()
+        stats = hot.adapter_bank.stats()
+        assert hot.trace_counts["decode"] == 1, hot.trace_counts
+        print(f"hot-swap serving (3 tenants / 2-row bank): {stats['loads']} "
+              f"registry loads, {stats['evictions']} evictions, decode "
+              f"traced {hot.trace_counts['decode']}x - token-parity with "
+              f"the static bank verified")
 
 
 if __name__ == "__main__":

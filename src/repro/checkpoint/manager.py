@@ -34,16 +34,34 @@ class CheckpointManager:
     def _step_dir(self, step: int) -> str:
         return os.path.join(self.dir, f"step_{step:010d}")
 
-    def steps(self):
+    def _list_steps(self, filename: Optional[str]):
+        """Complete snapshots on disk right now (no flush - safe to call
+        from the async writer itself). filename=None matches a step dir
+        holding any *.ckpt file (GC must see delta-only snapshots too)."""
         out = []
         for name in os.listdir(self.dir):
             m = _STEP_RE.match(name)
-            if m and os.path.exists(os.path.join(self.dir, name, "state.ckpt")):
+            if not m:
+                continue
+            d = os.path.join(self.dir, name)
+            if filename is None:
+                ok = os.path.isdir(d) and any(
+                    f.endswith(".ckpt") for f in os.listdir(d))
+            else:
+                ok = os.path.exists(os.path.join(d, filename))
+            if ok:
                 out.append(int(m.group(1)))
         return sorted(out)
 
-    def latest(self) -> Optional[int]:
-        s = self.steps()
+    def steps(self, filename: str = "state.ckpt"):
+        """Steps with a complete `filename` snapshot. Flushes pending async
+        writes first: discovery-after-async-save must never miss (or race
+        the rename of) an in-flight snapshot."""
+        self.wait()
+        return self._list_steps(filename)
+
+    def latest(self, filename: str = "state.ckpt") -> Optional[int]:
+        s = self.steps(filename)
         return s[-1] if s else None
 
     # -- save ---------------------------------------------------------------
@@ -66,8 +84,9 @@ class CheckpointManager:
         if self.async_write:
             t = threading.Thread(
                 target=self._write, args=(step, state, meta, filename))
+            with self._lock:
+                self._pending.append(t)
             t.start()
-            self._pending.append(t)
         else:
             self._write(step, state, meta, filename)
 
@@ -76,13 +95,20 @@ class CheckpointManager:
         self.save(step, delta, metadata, filename="delta.ckpt")
 
     def wait(self):
-        for t in self._pending:
-            t.join()
-        self._pending = []
+        cur = threading.current_thread()
+        with self._lock:
+            pending, self._pending = self._pending, []
+        for t in pending:
+            if t is not cur:  # a writer must never try to join itself
+                t.join()
 
     # -- restore ------------------------------------------------------------
     def restore(self, step: Optional[int] = None, filename: str = "state.ckpt"):
-        step = step if step is not None else self.latest()
+        """Load a snapshot (latest complete one by default). Always flushes
+        pending async writes first so restore(step) cannot read a snapshot
+        mid-write or miss one whose rename has not landed yet."""
+        self.wait()
+        step = step if step is not None else self.latest(filename)
         if step is None:
             return None, None
         path = os.path.join(self._step_dir(step), filename)
@@ -90,6 +116,9 @@ class CheckpointManager:
 
     # -- GC -----------------------------------------------------------------
     def _gc(self):
-        steps = self.steps()
+        # runs inside the async writer thread: must NOT wait() (it would
+        # join itself) and must see every snapshot flavour, including
+        # delta-only step dirs (adapter registries never write state.ckpt)
+        steps = self._list_steps(None)
         for s in steps[: max(0, len(steps) - self.keep)]:
             shutil.rmtree(self._step_dir(s), ignore_errors=True)

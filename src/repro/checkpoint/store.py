@@ -69,7 +69,12 @@ def save_tree(path: str, tree, *, compress: bool = True,
     }
     raw = msgpack.packb(payload, use_bin_type=True)
     if compress and zstandard is not None:
-        raw = b"ZSTD" + zstandard.ZstdCompressor(level=3).compress(raw)
+        # write_checksum: zstd only validates frames that carry one, and
+        # the integrity check is what lets load_tree reject bit flips
+        # instead of deserializing corrupted numbers (zlib's adler32 is
+        # always on)
+        raw = b"ZSTD" + zstandard.ZstdCompressor(
+            level=3, write_checksum=True).compress(raw)
     elif compress:
         raw = b"ZLIB" + zlib.compress(raw, level=3)
     tmp = path + ".tmp"
@@ -81,18 +86,32 @@ def save_tree(path: str, tree, *, compress: bool = True,
 
 
 def load_tree(path: str):
+    """Load a snapshot. Any corruption - truncated file, flipped bytes,
+    bad compression stream, or array bytes that do not match their
+    declared dtype*shape - raises ValueError naming the file, so callers
+    (restore/resume, adapter registries) distinguish 'unreadable snapshot'
+    from programming errors and can fall back to an older version."""
     with open(path, "rb") as f:
         raw = f.read()
-    if raw[:4] == b"ZSTD":
-        if zstandard is None:
-            raise ImportError(
-                f"{path} is zstd-compressed but `zstandard` is not installed")
-        raw = zstandard.ZstdDecompressor().decompress(raw[4:])
-    elif raw[:4] == b"ZLIB":
-        raw = zlib.decompress(raw[4:])
-    payload = msgpack.unpackb(raw, raw=False)
-    flat = {}
-    for k, spec in payload["arrays"].items():
-        arr = np.frombuffer(spec["data"], dtype=_np_dtype(spec["dtype"]))
-        flat[k] = arr.reshape(spec["shape"])
+    try:
+        if raw[:4] == b"ZSTD":
+            if zstandard is None:
+                raise ImportError(
+                    f"{path} is zstd-compressed but `zstandard` is not "
+                    "installed")
+            raw = zstandard.ZstdDecompressor().decompress(raw[4:])
+        elif raw[:4] == b"ZLIB":
+            raw = zlib.decompress(raw[4:])
+        payload = msgpack.unpackb(raw, raw=False)
+        if not isinstance(payload, dict) or "arrays" not in payload \
+                or "meta" not in payload:
+            raise ValueError("payload is not a snapshot envelope")
+        flat = {}
+        for k, spec in payload["arrays"].items():
+            arr = np.frombuffer(spec["data"], dtype=_np_dtype(spec["dtype"]))
+            flat[k] = arr.reshape(spec["shape"])
+    except ImportError:
+        raise
+    except Exception as e:
+        raise ValueError(f"corrupt checkpoint {path}: {e!r}") from e
     return _unflatten(flat), payload["meta"]

@@ -134,6 +134,91 @@ def select_tasks(bank_params, task_ids):
     return tu.map_with_path(sel, bank_params)
 
 
+def init_bank(params, size: int):
+    """Tile one param tree into a T-row bank: adapter leaves (L, d) ->
+    (L, T, d), every row a copy of `params`' adapter (identity rows when
+    `params` is an untuned backbone). Non-adapter leaves are shared.
+
+    Structurally identical to `build_bank([params] * size)` but without
+    materializing `size` full trees; this is the empty bank a hot-swap
+    serving process starts from before any task row is loaded.
+    """
+
+    def one(path, leaf):
+        if ADAPTER_RE.search(path):
+            return jnp.repeat(leaf[..., None, :], size, axis=-2)
+        return leaf
+
+    return tu.map_with_path(one, params)
+
+
+def adapter_row(tree):
+    """Filter a delta/param tree down to its Hadamard adapter leaves - the
+    exact set of leaves a bank row stores. Non-adapter leaves (tuned norms,
+    heads) become None placeholders; the result is what `insert_bank_row`
+    consumes."""
+    mask = tu.mask_from_patterns(tree, (r"/adapter/",))
+    row, _ = tu.partition(tree, mask)
+    return row
+
+
+def validate_adapter_row(bank, row) -> None:
+    """Check a row tree against a bank before surgery: every adapter leaf
+    of the bank must be present in the row with the bank's per-row shape
+    (bank (L, T, d) -> row (L, d)) and a castable dtype. Raises ValueError
+    naming every mismatch - a corrupt or wrong-arch delta must fail loudly
+    before it is scattered into live serving state."""
+    flat_row = dict(tu.flatten_with_paths(row))
+    problems = []
+    for path, leaf in tu.flatten_with_paths(bank):
+        if not ADAPTER_RE.search(path):
+            continue
+        r = flat_row.pop(path, None)
+        want = leaf.shape[:-2] + leaf.shape[-1:]
+        if r is None:
+            problems.append(f"missing adapter leaf {path} (want {want})")
+        elif tuple(r.shape) != want:
+            problems.append(
+                f"{path}: row shape {tuple(r.shape)} != bank row {want}")
+        elif not jnp.issubdtype(jnp.asarray(r).dtype, jnp.floating):
+            problems.append(f"{path}: non-float dtype {jnp.asarray(r).dtype}")
+    extra = [p for p in flat_row if ADAPTER_RE.search(p)]
+    problems += [f"unknown adapter leaf {p}" for p in extra]
+    if problems:
+        raise ValueError("adapter row does not fit bank:\n  "
+                         + "\n  ".join(problems))
+
+
+def insert_bank_row(bank, row, idx):
+    """Write one task's adapters into bank row `idx` in place (jittable;
+    idx may be traced). bank adapter leaves (L, T, d) get row leaves (L, d)
+    scattered at T=idx; everything else passes through untouched. Jitted
+    with the bank donated, this is the no-retrace hot-swap primitive: the
+    bank keeps its shape, so downstream jitted ticks never recompile."""
+    flat_row = dict(tu.flatten_with_paths(row))
+
+    def one(path, leaf):
+        r = flat_row.get(path)
+        if r is None or not ADAPTER_RE.search(path):
+            return leaf
+        return jax.lax.dynamic_update_index_in_dim(
+            leaf, r.astype(leaf.dtype), idx, axis=-2)
+
+    return tu.map_with_path(one, bank)
+
+
+def extract_bank_row(bank, idx: int):
+    """Read row `idx` back out of a bank as an adapter-only row tree
+    ((L, T, d) -> (L, d)); the inverse of `insert_bank_row` for one row."""
+
+    def one(path, leaf):
+        if ADAPTER_RE.search(path):
+            return jax.lax.index_in_dim(leaf, idx, axis=-2, keepdims=False)
+        return None
+
+    return tu.map_with_path(one, bank)
+
+
 def perturb_adapters(params, key, scale: float = 0.05):
     """Synthesize a 'fine-tuned' task variant: shift every Hadamard adapter
     leaf by scale * N(0, 1) under a per-leaf deterministic key (crc32 of

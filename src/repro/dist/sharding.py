@@ -71,6 +71,13 @@ _RULES: Tuple[Tuple[re.Pattern, str], ...] = tuple(
 
 _MODEL_DIM_FROM_END = {"col": 1, "row": 2, "embed": 2, "expert": 3}
 
+# Hadamard adapter leaves - including their (L, T, d) bank-stacked form -
+# are pinned replicated by construction, not merely by falling through the
+# rule table: hot-swap row inserts are host-driven donated scatters on the
+# task axis, and the per-request bank gather inside the decode tick is
+# collective-free only while every device holds every row.
+_ADAPTER_RE = re.compile(r"/adapter/")
+
 
 def fit_spec(entries: Sequence, shape: Sequence[int], mesh,
              promote_model: bool = False) -> List:
@@ -108,10 +115,12 @@ def _match_rule(path: str) -> Optional[str]:
 def param_spec(path: str, shape: Sequence[int], cfg, mesh) -> P:
     """PartitionSpec for one param leaf. Stacked group leaves carry a
     leading `repeats` dim which is never sharded (it is the scan axis)."""
+    if _ADAPTER_RE.search(path):
+        return P()  # bank rows stay replicated (see _ADAPTER_RE note)
     kind = _match_rule(path)
     ndim = len(shape)
     if kind is None or ndim < 2:
-        return P()  # replicated (norms, biases, adapters, routers, scalars)
+        return P()  # replicated (norms, biases, routers, scalars)
 
     offset = _MODEL_DIM_FROM_END[kind]
     if ndim < offset:
@@ -235,3 +244,17 @@ def slot_cache_shardings(caches, cfg, mesh):
         return NamedSharding(mesh, slot_cache_spec(path, shape, cfg, mesh))
 
     return tu.map_with_path(one, caches)
+
+
+# ---------------------------------------------------------------------------
+# Adapter-bank rows (hot-swap serving, serving/registry.py)
+# ---------------------------------------------------------------------------
+
+
+def adapter_row_shardings(row, mesh):
+    """NamedShardings for one adapter row about to be scattered into a live
+    bank: fully replicated, matching the bank leaves it lands in (adapter
+    paths in `param_spec`). Placing the KB-sized row everywhere up front
+    keeps the donated in-place insert a local write on every device - no
+    resharding collective inside the hot-swap path."""
+    return tu.map_with_path(lambda p, l: NamedSharding(mesh, P()), row)

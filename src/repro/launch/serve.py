@@ -9,6 +9,15 @@ retires them as they finish, printing a throughput/latency report
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
       --requests 8 --num-slots 4 --prompt-len 16 --new-tokens 8 --tasks 3
 
+Multi-tenant hot-swap: with `--adapter-dir` the per-task deltas live in an
+on-disk AdapterRegistry and requests address adapters by NAME; only
+`--bank-size` rows are device-resident at once (LRU eviction, pinned while
+in flight), and a task published mid-stream is admitted without rebuilding
+the engine or retracing the decode tick:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
+      --requests 12 --tasks 6 --bank-size 2 --adapter-dir /tmp/adapters
+
 `--static` falls back to the lock-step ServeEngine.generate batch (the
 pre-scheduler path, kept for A/B comparison).
 """
@@ -22,11 +31,12 @@ import numpy as np
 
 from repro.configs import get, get_smoke
 from repro.core import peft
-from repro.core.hadamard import perturb_adapters
+from repro.core.hadamard import extract_delta, perturb_adapters
 from repro.dist.api import use_mesh
 from repro.launch.mesh import parse_mesh
 from repro.models import model as M
 from repro.serving.engine import MultiTaskEngine, ServeEngine
+from repro.serving.registry import AdapterBank, AdapterRegistry
 from repro.serving.scheduler import Request, Scheduler
 
 
@@ -56,6 +66,13 @@ def main():
                     help="max generation budget per request")
     ap.add_argument("--tasks", type=int, default=0,
                     help=">0: multi-task adapter bank serving")
+    ap.add_argument("--adapter-dir", default="",
+                    help="hot-swap serving: publish/load per-task deltas "
+                         "through an AdapterRegistry at this path; requests "
+                         "carry adapter NAMES resolved at admission")
+    ap.add_argument("--bank-size", type=int, default=4,
+                    help="device-resident adapter rows for --adapter-dir "
+                         "(misses load from disk, cold rows are evicted LRU)")
     ap.add_argument("--top-k", type=int, default=0,
                     help=">0: per-request top-k sampling (greedy otherwise)")
     ap.add_argument("--stream", action="store_true",
@@ -77,8 +94,26 @@ def main():
     key = jax.random.PRNGKey(args.seed)
     base, variants = build_params(key, cfg, args.tasks)
 
+    registry = None
+    if args.adapter_dir:
+        if variants is None:
+            raise SystemExit("--adapter-dir requires --tasks > 0")
+        if args.static:
+            raise SystemExit("--adapter-dir serves through the scheduler "
+                             "(drop --static)")
+        # trainer side of the lifecycle: publish every task's KB-sized
+        # delta as a named, versioned registry entry (all but the last -
+        # that one is published mid-stream below to demonstrate runtime
+        # tenant onboarding)
+        registry = AdapterRegistry(args.adapter_dir)
+        for t, params in enumerate(variants[:-1] or variants):
+            registry.publish(f"task{t}", extract_delta(params))
+
     with use_mesh(mesh):  # engine captures the mesh; params placed sharded
-        if variants is not None:
+        if registry is not None:
+            engine = MultiTaskEngine(
+                cfg, AdapterBank(cfg, base, args.bank_size, registry))
+        elif variants is not None:
             engine = MultiTaskEngine(cfg, variants)
         else:
             engine = ServeEngine(cfg, base, fold=args.fold)
@@ -113,12 +148,17 @@ def main():
                               args.prompt_len + 1))
         budget = int(rs.randint(max(1, args.new_tokens // 2),
                                 args.new_tokens + 1))
+        kw = {}
+        if registry is not None:
+            kw["adapter"] = f"task{i % args.tasks}"
+        elif args.tasks > 0:
+            kw["task_id"] = i % args.tasks
         requests.append(Request(
             prompt=rs.randint(10, cfg.vocab_size, size=(plen,)),
             max_new_tokens=budget,
             top_k=args.top_k,
             seed=args.seed + i,
-            task_id=i % args.tasks if args.tasks > 0 else 0,
+            **kw,
         ))
 
     stream = None
@@ -132,10 +172,49 @@ def main():
     sched = Scheduler(
         engine, num_slots=args.num_slots, max_len=max_len, stream=stream,
         prefill_bucket=8 if Scheduler.supports_bucketing(cfg) else None)
-    done, report = sched.run(requests)
+
+    if registry is not None and args.tasks > 1:
+        # multi-tenant lifecycle: the LAST task's tenant shows up only
+        # after serving has started - publish + serve it mid-stream with
+        # no engine rebuild (and, asserted below, no decode retrace)
+        hot = f"task{args.tasks - 1}"
+        early = [r for r in requests if r.adapter != hot]
+        late = [r for r in requests if r.adapter == hot]
+        t0 = time.perf_counter()
+        ids = [sched.submit(r) for r in early]
+        while sched.pending or sched.active or late:
+            sched.step()
+            if late and len(sched.completions) * 2 >= len(early):
+                registry.publish(hot, extract_delta(variants[-1]))
+                print(f"  ++ runtime add: published {hot!r}, submitting "
+                      f"{len(late)} request(s) for it mid-stream")
+                ids += [sched.submit(r) for r in late]
+                late = []
+        elapsed = time.perf_counter() - t0
+        done = [sched.completions.pop(i) for i in ids]
+        n_tok = sum(len(c.tokens) for c in done)
+        report = {"requests": len(done), "tokens": n_tok,
+                  "elapsed_s": elapsed, "ticks": sched._ticks,
+                  "requests_per_s": len(done) / elapsed,
+                  "tokens_per_s": n_tok / elapsed,
+                  "mean_ttft_s": sum(c.ttft_s for c in done) / len(done),
+                  "mean_latency_s": sum(c.latency_s for c in done) / len(done)}
+        # runtime remove: retire the first tenant - future loads fail,
+        # its device row is freed for the next miss
+        victim = "task0"
+        registry.remove(victim)
+        engine.adapter_bank.invalidate(victim)
+        bank = engine.adapter_bank.stats()
+        print(f"  -- runtime remove: {victim!r} unpublished + row freed")
+        print(f"adapter bank: {bank['resident']}/{bank['size']} rows "
+              f"resident, {bank['loads']} loads, {bank['evictions']} "
+              f"evictions; decode traced {engine.trace_counts['decode']}x")
+    else:
+        done, report = sched.run(requests)
 
     for c in done:
-        print(f"req{c.request_id} task{c.task_id} prompt={c.prompt_len} "
+        who = c.adapter if c.adapter is not None else f"task{c.task_id}"
+        print(f"req{c.request_id} {who} prompt={c.prompt_len} "
               f"-> {len(c.tokens)} tok ({c.finish_reason}, "
               f"ttft {c.ttft_s * 1e3:.0f}ms): {c.tokens[:8].tolist()}")
     print(f"served {report['requests']} requests / {report['tokens']} tokens "

@@ -136,29 +136,79 @@ class ServeEngine:
 class MultiTaskEngine(ServeEngine):
     """One frozen backbone + a bank of per-task Hadamard adapters.
 
-    `param_list` are per-task param trees sharing every non-adapter leaf.
-    Each generate() call takes per-request task ids; adapters are gathered
-    per request and broadcast over the sequence inside apply_hadamard.
-    Adapter leaves are replicated by the sharding rules, so the gather is
+    `tasks` is either a list of per-task param trees sharing every
+    non-adapter leaf (static bank, frozen at construction) or an
+    `AdapterBank` (hot-swappable: rows are inserted/evicted at runtime by
+    name through its registry - see serving/registry.py). Each generate()
+    call takes per-request task ids (bank rows); adapters are gathered per
+    request and broadcast over the sequence inside apply_hadamard. Adapter
+    leaves are replicated by the sharding rules, so the gather is
     collective-free under a mesh.
+
+    Hot-swap contract: the bank tree never changes shape (row writes are
+    in-place donated scatters), so `trace_counts` stays at one compile per
+    tick shape across any number of swaps - asserted by the registry tests.
     """
 
-    def __init__(self, cfg: ModelCfg, param_list):
-        self.bank = build_bank(param_list)
-        super().__init__(cfg, self.bank, fold=False)
-        self.bank = self.params  # mesh-placed bank
+    def __init__(self, cfg: ModelCfg, tasks):
+        from repro.serving.registry import AdapterBank  # cycle-free import
+
+        self.adapter_bank = tasks if isinstance(tasks, AdapterBank) else None
+        tree = (self.adapter_bank.tree if self.adapter_bank is not None
+                else build_bank(tasks))
+        super().__init__(cfg, tree, fold=False)
+        if self.adapter_bank is not None:
+            # the bank owns the (mesh-placed) live tree from here on: row
+            # inserts donate and rebind it, so the engine must re-read it
+            # every call instead of capturing this placement
+            self.adapter_bank.attach(self.params, self.mesh)
+            self.params = None
+        else:
+            self._static_bank = self.params
         # Scheduler-tick variants: the bank gather happens INSIDE the jit so
         # a fresh mix of task ids each tick re-gathers without re-placing
         # params (the gather is collective-free: adapters are replicated).
-        self._prefill_tasks = jax.jit(
-            lambda bank, toks, tids, cl, lp: M.prefill_lm(
-                select_tasks(bank, tids), cfg, toks, cache_len=cl,
-                last_pos=lp),
-            static_argnums=(3,))
-        self._decode_tasks = jax.jit(
-            lambda bank, caches, tok, pos, tids: M.decode_lm(
-                select_tasks(bank, tids), cfg, caches, tok, pos),
-            donate_argnums=(1,))
+        # The python bodies bump trace_counts, making retraces observable.
+        self.trace_counts = {"prefill": 0, "decode": 0}
+
+        def _pf(bank, toks, tids, cl, lp):
+            self.trace_counts["prefill"] += 1
+            return M.prefill_lm(select_tasks(bank, tids), cfg, toks,
+                                cache_len=cl, last_pos=lp)
+
+        def _dc(bank, caches, tok, pos, tids):
+            self.trace_counts["decode"] += 1
+            return M.decode_lm(select_tasks(bank, tids), cfg, caches, tok,
+                               pos)
+
+        self._prefill_tasks = jax.jit(_pf, static_argnums=(3,))
+        self._decode_tasks = jax.jit(_dc, donate_argnums=(1,))
+
+    @property
+    def bank(self):
+        """The live bank tree (re-read from the AdapterBank each call:
+        hot-swap inserts donate the previous tree)."""
+        return (self.adapter_bank.tree if self.adapter_bank is not None
+                else self._static_bank)
+
+    # -- adapter-name resolution (scheduler admission) ----------------------
+
+    def has_adapter(self, name: str) -> bool:
+        return (self.adapter_bank is not None
+                and (self.adapter_bank.row_of(name) is not None
+                     or name in self.adapter_bank.registry))
+
+    def acquire_adapter(self, name: str) -> int:
+        """name -> pinned bank row (loading from the registry on a miss)."""
+        if self.adapter_bank is None:
+            raise ValueError(
+                "engine has a static bank; named-adapter requests need an "
+                "AdapterBank (MultiTaskEngine(cfg, AdapterBank(...)))")
+        return self.adapter_bank.acquire(name)
+
+    def release_adapter(self, name: str) -> None:
+        if self.adapter_bank is not None:
+            self.adapter_bank.release(name)
 
     def prefill(self, tokens, cache_len: int, task_ids=None, last_pos=None):
         if task_ids is None:
@@ -189,3 +239,28 @@ class MultiTaskEngine(ServeEngine):
             return self.generate(tokens, max_new_tokens, rng=rng, top_k=top_k)
         finally:
             self.params = saved
+
+    def generate_for_adapters(self, tokens: np.ndarray, names,
+                              max_new_tokens: int,
+                              rng: Optional[jax.Array] = None, top_k: int = 0):
+        """Lock-step generation addressed by adapter *name*: resolve every
+        name to a bank row (loading/evicting as needed), then generate.
+        Resolution happens up front, so all rows are resident for the whole
+        batch - `len(set(names))` must fit the bank."""
+        if self.adapter_bank is None:
+            raise ValueError("generate_for_adapters needs an AdapterBank")
+        uniq = list(dict.fromkeys(names))
+        acquired = []
+        try:
+            for n in uniq:  # pin all, then unpin: no row displaces another
+                self.adapter_bank.acquire(n)
+                acquired.append(n)
+            rows = np.asarray([self.adapter_bank.row_of(n) for n in names],
+                              np.int32)
+            return self.generate_for_tasks(tokens, rows, max_new_tokens,
+                                           rng=rng, top_k=top_k)
+        finally:
+            # releases exactly what was pinned: a mid-loop BankFullError /
+            # KeyError must not leak pins and wedge the bank
+            for n in acquired:
+                self.adapter_bank.release(n)

@@ -1,0 +1,320 @@
+"""Adapter lifecycle for multi-tenant serving: a disk registry of named,
+versioned adapter deltas plus a bounded device-resident hot-swap bank.
+
+The paper's economics make tasks tenants: one Hadamard adapter is
+2*L*d floats (KBs), so the natural serving topology is one frozen
+(possibly mesh-sharded) backbone and an open-ended population of task
+adapters that come and go at runtime. The pieces:
+
+  * `AdapterRegistry` - a directory of `CheckpointManager`-backed task
+    subdirectories. `publish(name, delta)` writes an atomic, versioned
+    KB-sized snapshot (`<dir>/<name>/step_*/delta.ckpt`); `load(name)`
+    returns the newest complete version as host arrays. Registries are
+    plain files: trainers publish from one process, servers load from
+    another, and versions roll forward without coordination.
+
+  * `AdapterBank` - `size` device-resident rows of a stacked bank tree
+    (adapter leaves (L, T, d), backbone leaves shared). `acquire(name)`
+    resolves a name to a row: LRU-hit in place, miss loads from the
+    registry and scatters into a free (or evicted-cold) row via ONE
+    donated jitted `dynamic_update_index_in_dim` - the bank never
+    changes shape, so the jitted prefill/decode ticks that consume it
+    never retrace across swaps. Rows referenced by in-flight requests
+    are pinned (`acquire`/`release` refcounts); eviction only ever takes
+    an unpinned row, so a mid-decode request can never have its adapter
+    swapped out from under it.
+
+`MultiTaskEngine` accepts an `AdapterBank` in place of a static param
+list, and `serving/scheduler.py` resolves `Request.adapter` names through
+it at admission time (see those modules).
+"""
+from __future__ import annotations
+
+import os
+import re
+import threading
+from collections import OrderedDict
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.common import tree as tu
+from repro.core.hadamard import (adapter_row, init_bank, insert_bank_row,
+                                 validate_adapter_row)
+from repro.dist.api import use_mesh
+from repro.dist.sharding import adapter_row_shardings
+
+_NAME_RE = re.compile(r"^[A-Za-z0-9][A-Za-z0-9._-]*$")
+
+
+class BankFullError(RuntimeError):
+    """Every bank row is pinned by an in-flight request; the caller should
+    retry once a request retires (the scheduler defers admission)."""
+
+
+def _check_name(name: str) -> str:
+    if not _NAME_RE.match(name or ""):
+        raise ValueError(
+            f"bad adapter name {name!r}: must match {_NAME_RE.pattern} "
+            "(it becomes a directory name)")
+    return name
+
+
+class AdapterRegistry:
+    """Named, versioned adapter deltas on disk.
+
+    Layout: `<directory>/<name>/step_<version>/delta.ckpt`, one
+    `CheckpointManager` per adapter name - so every write is atomic
+    (tmp + rename), versions garbage-collect to `keep`, and `load`
+    always resolves to the newest complete snapshot even with a
+    publisher racing in another process.
+    """
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        self._mgrs: Dict[str, CheckpointManager] = {}
+        self._lock = threading.Lock()
+        os.makedirs(directory, exist_ok=True)
+
+    def _mgr(self, name: str, create: bool = False) -> CheckpointManager:
+        """Per-name manager. Read paths pass create=False and get KeyError
+        for names with no directory: CheckpointManager.__init__ makedirs,
+        and a membership test / typo'd request must not write into the
+        registry (or resurrect a removed tenant's directory)."""
+        path = os.path.join(self.dir, _check_name(name))
+        with self._lock:
+            m = self._mgrs.get(name)
+            if m is None:
+                if not create and not os.path.isdir(path):
+                    raise KeyError(f"adapter {name!r} is not published "
+                                   f"under {self.dir}")
+                m = self._mgrs[name] = CheckpointManager(path, keep=self.keep)
+            return m
+
+    # -- publish/load --------------------------------------------------------
+
+    def publish(self, name: str, delta, *, version: Optional[int] = None,
+                metadata: Optional[dict] = None) -> int:
+        """Write one adapter version; returns the version written. Omitted
+        `version` auto-increments past the newest on disk. The delta must
+        contain at least one Hadamard adapter leaf (a registry of deltas
+        that cannot serve is a configuration bug worth failing on)."""
+        if not any(re.search(r"/adapter/", p)
+                   for p, _ in tu.flatten_with_paths(delta)):
+            raise ValueError(
+                f"delta for {name!r} has no /adapter/ leaves - not a "
+                "Hadamard task delta")
+        mgr = self._mgr(name, create=True)
+        if version is None:
+            newest = mgr.latest(filename="delta.ckpt")
+            version = 0 if newest is None else newest + 1
+        mgr.save_delta(version, delta, metadata=dict(metadata or {},
+                                                     name=name))
+        return version
+
+    def load(self, name: str, version: Optional[int] = None) -> Tuple[dict, dict]:
+        """(delta host tree, metadata) for the newest (or given) version.
+        Raises KeyError for names with no complete version on disk."""
+        mgr = self._mgr(name)  # KeyError for never-published names
+        tree, meta = mgr.restore(version, filename="delta.ckpt")
+        if tree is None:
+            raise KeyError(f"adapter {name!r} has no published version "
+                           f"under {self.dir}")
+        return tree, meta
+
+    # -- introspection/lifecycle --------------------------------------------
+
+    def names(self) -> List[str]:
+        out = []
+        for name in sorted(os.listdir(self.dir)):
+            if not os.path.isdir(os.path.join(self.dir, name)) \
+                    or not _NAME_RE.match(name):  # skip foreign dirs
+                continue
+            if self._mgr(name).latest(filename="delta.ckpt") is not None:
+                out.append(name)
+        return out
+
+    def versions(self, name: str) -> List[int]:
+        try:
+            return self._mgr(name).steps(filename="delta.ckpt")
+        except KeyError:
+            return []
+
+    def __contains__(self, name: str) -> bool:
+        try:
+            return self._mgr(name).latest(filename="delta.ckpt") is not None
+        except (KeyError, ValueError):  # unpublished / unpublishable name
+            return False
+
+    def remove(self, name: str) -> None:
+        """Delete every version of `name` (serving banks keep their loaded
+        copy until invalidated - removal only stops future loads)."""
+        import shutil
+
+        with self._lock:
+            self._mgrs.pop(name, None)
+        shutil.rmtree(os.path.join(self.dir, _check_name(name)),
+                      ignore_errors=True)
+
+
+class AdapterBank:
+    """Bounded device-resident adapter rows with name->row resolution,
+    LRU eviction, and pin counts.
+
+    The bank tree is a full param tree whose adapter leaves are stacked
+    (L, size, d); `MultiTaskEngine` consumes it exactly like a static
+    `build_bank` tree, so static and hot-swap serving share every jitted
+    tick. All mutation goes through one donated jitted scatter
+    (`insert_bank_row`), compiled once: swaps update buffers in place and
+    can never retrace the decode path.
+    """
+
+    def __init__(self, cfg, base_params, size: int, registry: AdapterRegistry):
+        if size < 1:
+            raise ValueError("bank size must be >= 1")
+        self.cfg = cfg
+        self.size = size
+        self.registry = registry
+        self.mesh = None
+        self._rows: "OrderedDict[str, int]" = OrderedDict()  # LRU: name->row
+        self._pins: Dict[str, int] = {}
+        self._free: List[int] = list(range(size))
+        self.loads = 0      # registry loads (misses)
+        self.evictions = 0  # rows displaced to make room
+        self._insert_traces = 0
+
+        def _ins(adapters, row, idx):
+            self._insert_traces += 1  # trace-time only: retrace detector
+            return insert_bank_row(adapters, row, idx)
+
+        self._insert = jax.jit(_ins, donate_argnums=(0,))
+        # identity rows until tasks are loaded; the engine re-places this
+        # tree under its mesh and hands it back via attach().
+        self.attach(init_bank(base_params, size), None)
+
+    # -- engine plumbing -----------------------------------------------------
+
+    def attach(self, placed_tree, mesh) -> None:
+        """Adopt the engine's (possibly mesh-sharded) placement of the bank
+        tree; subsequent row inserts stay under that mesh.
+
+        The tree is split into the stacked adapter leaves (mutated by
+        donated row inserts) and the frozen backbone (never donated):
+        donating the whole tree would invalidate backbone arrays the
+        caller may still share with other engines/param trees, and would
+        needlessly re-thread MB-sized leaves through every KB-sized swap."""
+        mask = tu.mask_from_patterns(placed_tree, (r"/adapter/",))
+        self._adapters, self._frozen = tu.partition(placed_tree, mask)
+        self._merged = placed_tree
+        self.mesh = mesh
+
+    @property
+    def tree(self):
+        """The live bank tree (adapter rows merged over the frozen
+        backbone). Re-read after every acquire: inserts rebind the adapter
+        subtree. Memoized - the decode tick reads this every token, and
+        the merge only changes when a row insert lands."""
+        if self._merged is None:
+            self._merged = tu.merge(self._adapters, self._frozen)
+        return self._merged
+
+    # -- resolution ----------------------------------------------------------
+
+    def row_of(self, name: str) -> Optional[int]:
+        """Resident row for `name`, or None (no load, no LRU bump)."""
+        return self._rows.get(name)
+
+    def acquire(self, name: str) -> int:
+        """Resolve `name` to a resident row and pin it. Hit: LRU bump.
+        Miss: load from the registry, evict the coldest unpinned row if no
+        row is free, scatter the delta in place. Raises KeyError for
+        unpublished names and BankFullError when every row is pinned."""
+        row = self._rows.get(name)
+        if row is not None:
+            self._rows.move_to_end(name)
+            self._pins[name] = self._pins.get(name, 0) + 1
+            return row
+
+        if not self._free and all(self._pins.get(n, 0) > 0
+                                  for n in self._rows):
+            # check before the (disk) load: a full-pinned bank is the
+            # scheduler's backpressure signal, not an I/O error
+            raise BankFullError(
+                f"all {self.size} bank rows are pinned; cannot admit "
+                f"adapter {name!r}")
+
+        delta, _meta = self.registry.load(name)
+        row_tree = adapter_row(delta)
+        validate_adapter_row(self._adapters, row_tree)
+
+        if self._free:
+            idx = self._free.pop(0)
+        else:
+            victim = next(n for n in self._rows if not self._pins.get(n, 0))
+            idx = self._rows.pop(victim)
+            self._pins.pop(victim, None)
+            self.evictions += 1
+
+        row_tree = jax.tree.map(
+            lambda v: None if v is None else jnp.asarray(v),
+            row_tree, is_leaf=lambda v: v is None)
+        with use_mesh(self.mesh):
+            if self.mesh is not None:
+                row_tree = jax.device_put(
+                    row_tree, adapter_row_shardings(row_tree, self.mesh))
+            self._adapters = self._insert(self._adapters, row_tree,
+                                          np.int32(idx))
+        self._merged = None  # rebuilt lazily on the next tree read
+        self.loads += 1
+        self._rows[name] = idx
+        self._pins[name] = 1
+        return idx
+
+    def release(self, name: str) -> None:
+        """Drop one pin; the row stays resident (warm) until evicted."""
+        c = self._pins.get(name, 0)
+        if c > 0:
+            self._pins[name] = c - 1
+
+    def lookup(self, name: str) -> int:
+        """One-shot resolve without holding a pin (lock-step callers that
+        finish before the next acquire, e.g. generate_for_adapters)."""
+        row = self.acquire(name)
+        self.release(name)
+        return row
+
+    def invalidate(self, name: str) -> bool:
+        """Forget a resident row so the next acquire reloads it from the
+        registry (picking up a newly published version). Returns False if
+        the row is pinned by an in-flight request (caller retries later)
+        or not resident."""
+        if self._pins.get(name, 0) > 0:
+            return False
+        row = self._rows.pop(name, None)
+        if row is None:
+            return False
+        self._pins.pop(name, None)
+        self._free.append(row)
+        return True
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def resident(self) -> List[str]:
+        return list(self._rows)
+
+    def pins(self, name: str) -> int:
+        return self._pins.get(name, 0)
+
+    def stats(self) -> dict:
+        return {
+            "size": self.size,
+            "resident": len(self._rows),
+            "loads": self.loads,
+            "evictions": self.evictions,
+            "insert_traces": self._insert_traces,
+        }

@@ -44,12 +44,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.serving.engine import sample_topk
+from repro.serving.registry import BankFullError
 
 
 @dataclass
 class Request:
     """One generation request; arrives whenever, carries its own budget
-    and sampling params, and (for MultiTaskEngine) its adapter task id."""
+    and sampling params, and (for MultiTaskEngine) its adapter: either a
+    static bank row (`task_id`) or - for hot-swap engines - a registry
+    `adapter` name, resolved to a live row at admission (loaded from disk
+    on a bank miss, evicting the coldest unpinned row when full)."""
 
     prompt: np.ndarray  # (S,) int32 prompt tokens
     max_new_tokens: int
@@ -57,6 +61,7 @@ class Request:
     temperature: float = 1.0
     seed: Optional[int] = None  # rng seed for top-k sampling
     task_id: int = 0  # adapter-bank row (MultiTaskEngine)
+    adapter: Optional[str] = None  # adapter name (hot-swap MultiTaskEngine)
     eos_id: Optional[int] = None  # stop early on this token
 
 
@@ -65,10 +70,11 @@ class Completion:
     request_id: int
     tokens: np.ndarray  # generated tokens (includes the EOS token, if any)
     prompt_len: int
-    task_id: int
-    finish_reason: str  # 'eos' | 'length'
+    task_id: int  # bank row the request ran under (resolved, for named)
+    finish_reason: str  # 'eos' | 'length' | 'error' (adapter vanished)
     ttft_s: float  # submit -> first token (includes queueing)
     latency_s: float  # submit -> finished
+    adapter: Optional[str] = None  # adapter name (named requests only)
 
 
 @dataclass
@@ -79,6 +85,7 @@ class _Slot:
     tokens: List[int] = field(default_factory=list)
     next_tok: int = 0  # sampled, not yet fed through decode
     pos: int = 0  # absolute position of the next decode write
+    row: int = 0  # resolved adapter-bank row (pinned while in flight)
     submit_t: float = 0.0
     first_tok_t: float = 0.0
 
@@ -145,7 +152,9 @@ class Scheduler:
 
     def submit(self, req: Request) -> int:
         """Queue a request; returns its id. Admission happens on the next
-        tick that has a free slot."""
+        tick that has a free slot. Named-adapter requests are validated
+        here (engine supports names + the name resolves in bank/registry)
+        so the queue never holds a request that can never be admitted."""
         if req.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
         S = int(np.asarray(req.prompt).shape[-1])
@@ -153,6 +162,15 @@ class Scheduler:
             raise ValueError(
                 f"prompt_len {S} + max_new_tokens {req.max_new_tokens} "
                 f"exceeds slot cache length {self.max_len}")
+        if req.adapter is not None:
+            if getattr(self.engine, "adapter_bank", None) is None:
+                raise ValueError(
+                    "request names an adapter but the engine has no "
+                    "AdapterBank (hot-swap MultiTaskEngine required)")
+            if not self.engine.has_adapter(req.adapter):
+                raise KeyError(
+                    f"adapter {req.adapter!r} is neither bank-resident nor "
+                    "published in the registry")
         rid = self._next_id
         self._next_id += 1
         self.queue.append((rid, req, time.perf_counter()))
@@ -195,15 +213,24 @@ class Scheduler:
             request_id=st.request_id,
             tokens=np.asarray(st.tokens, np.int32),
             prompt_len=int(np.asarray(st.req.prompt).shape[-1]),
-            task_id=st.req.task_id,
+            task_id=st.row,
             finish_reason=reason,
             ttft_s=st.first_tok_t - st.submit_t,
             latency_s=now - st.submit_t,
+            adapter=st.req.adapter,
         )
+        if st.req.adapter is not None:
+            self.engine.release_adapter(st.req.adapter)  # unpin its row
         self.slots[slot_idx] = None  # immediately reusable
 
     def _admit_one(self, slot_idx: int, rid: int, req: Request,
                    submit_t: float):
+        """Admit one request. Raises BankFullError (before any state is
+        touched) when the request names an adapter and every bank row is
+        pinned - the caller defers the whole queue to a later tick."""
+        row = req.task_id
+        if req.adapter is not None:
+            row = self.engine.acquire_adapter(req.adapter)  # pins the row
         prompt = np.asarray(req.prompt, np.int32).reshape(1, -1)
         S = prompt.shape[1]
         last_pos = None
@@ -214,16 +241,16 @@ class Scheduler:
                 prompt = np.pad(prompt, ((0, 0), (0, padded - S)))
             last_pos = S - 1
         logits, fresh = self.engine.prefill(
-            prompt, self.max_len, task_ids=np.asarray([req.task_id]),
+            prompt, self.max_len, task_ids=np.asarray([row]),
             last_pos=last_pos)
         self.caches = self._admit(self.caches, fresh, jnp.int32(slot_idx))
         rng = (jax.random.PRNGKey(req.seed if req.seed is not None else rid)
                if req.top_k else None)
-        st = _Slot(request_id=rid, req=req, rng=rng, pos=S,
+        st = _Slot(request_id=rid, req=req, rng=rng, pos=S, row=row,
                    submit_t=submit_t)
         self.slots[slot_idx] = st
         st.next_tok = self._sample_one(logits, st)
-        self._task[slot_idx] = req.task_id
+        self._task[slot_idx] = row
         if not self._emit(slot_idx, st, st.next_tok):
             self._tok[slot_idx] = st.next_tok
             self._pos[slot_idx] = st.pos
@@ -240,7 +267,28 @@ class Scheduler:
         while free and self.queue:
             idx = free.pop()
             rid, req, submit_t = self.queue.popleft()
-            self._admit_one(idx, rid, req, submit_t)
+            try:
+                self._admit_one(idx, rid, req, submit_t)
+            except KeyError:
+                # the adapter was validated at submit but unpublished (and
+                # its row evicted) before admission - runtime removal is a
+                # supported operation, so fail THIS request, not the loop
+                now = time.perf_counter()
+                self.completions[rid] = Completion(
+                    request_id=rid, tokens=np.zeros((0,), np.int32),
+                    prompt_len=int(np.asarray(req.prompt).shape[-1]),
+                    task_id=-1, finish_reason="error", ttft_s=0.0,
+                    latency_s=now - submit_t, adapter=req.adapter)
+                free.append(idx)
+            except BankFullError:
+                # every bank row is pinned by an in-flight request: put the
+                # request back (FIFO order preserved) and retry once a
+                # retirement unpins a row. Deliberately not skipping ahead
+                # to later queued requests - reordering would starve the
+                # blocked tenant under sustained traffic.
+                self.queue.appendleft((rid, req, submit_t))
+                free.append(idx)
+                break
             if self.slots[idx] is None:
                 free.append(idx)
 

@@ -1,0 +1,150 @@
+"""Property tests for checkpoint/store.py (hypothesis, shim-compatible):
+randomized nested trees with mixed dtypes (incl. bfloat16) survive a
+save/load roundtrip bit-exactly with metadata intact, under both
+compression settings - and corrupted or truncated files are rejected with
+ValueError instead of being silently half-loaded.
+"""
+import os
+import tempfile
+
+import ml_dtypes
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint.store import load_tree, save_tree
+
+_DTYPES = ("float32", "float16", "bfloat16", "int32", "uint8")
+
+
+def _np(name):
+    return ml_dtypes.bfloat16 if name == "bfloat16" else np.dtype(name)
+
+
+def _random_tree(rng: np.random.RandomState, depth: int):
+    """Random nested dict of arrays; every level mixes leaves and subdicts."""
+    out = {}
+    for i in range(rng.randint(1, 4)):
+        key = f"k{i}_{rng.randint(100)}"
+        if depth > 0 and rng.rand() < 0.5:
+            out[key] = _random_tree(rng, depth - 1)
+        else:
+            dt = _np(_DTYPES[rng.randint(len(_DTYPES))])
+            shape = tuple(rng.randint(1, 5)
+                          for _ in range(rng.randint(0, 4)))
+            if np.issubdtype(np.dtype(dt) if dt is not ml_dtypes.bfloat16
+                             else np.float32, np.floating) \
+                    or dt is ml_dtypes.bfloat16:
+                out[key] = rng.standard_normal(shape).astype(dt)
+            else:
+                out[key] = rng.randint(0, 200, size=shape).astype(dt)
+    return out
+
+
+def _flat(tree, prefix=""):
+    for k, v in tree.items():
+        if isinstance(v, dict):
+            yield from _flat(v, f"{prefix}{k}/")
+        else:
+            yield f"{prefix}{k}", v
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**16), depth=st.integers(0, 3),
+       compress=st.booleans())
+def test_roundtrip_random_trees(seed, depth, compress):
+    rng = np.random.RandomState(seed)
+    tree = _random_tree(rng, depth)
+    meta = {"step": int(rng.randint(1 << 20)), "tag": f"s{seed}",
+            "nested": {"lr": 0.125, "ok": True}}
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "t.ckpt")
+        save_tree(path, tree, compress=compress, metadata=meta)
+        got, got_meta = load_tree(path)
+    assert got_meta == meta
+    want = dict(_flat(tree))
+    have = dict(_flat(got))
+    assert set(have) == set(want)
+    for p in want:
+        assert str(have[p].dtype) == str(want[p].dtype), p
+        assert have[p].shape == want[p].shape, p
+        # bit-exact across every dtype incl. bfloat16
+        assert have[p].tobytes() == want[p].tobytes(), p
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**16), compress=st.booleans(),
+       cut=st.floats(0.05, 0.95))
+def test_truncated_file_rejected(seed, compress, cut):
+    rng = np.random.RandomState(seed)
+    tree = _random_tree(rng, 2)
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "t.ckpt")
+        save_tree(path, tree, compress=compress, metadata={"step": 1})
+        raw = open(path, "rb").read()
+        with open(path, "wb") as f:  # torn write / partial copy
+            f.write(raw[: max(1, int(len(raw) * cut))])
+        with pytest.raises(ValueError, match="corrupt checkpoint"):
+            load_tree(path)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**16), offset=st.floats(0.0, 0.999))
+def test_flipped_byte_in_compressed_file_rejected(seed, offset):
+    """Compression gives every snapshot an integrity check for free: any
+    single flipped byte in a compressed stream (or its magic) must fail
+    loudly, never deserialize to different numbers."""
+    rng = np.random.RandomState(seed)
+    tree = _random_tree(rng, 2)
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "t.ckpt")
+        save_tree(path, tree, compress=True, metadata={"step": 1})
+        raw = bytearray(open(path, "rb").read())
+        i = int(len(raw) * offset)
+        raw[i] ^= 0xFF
+        with open(path, "wb") as f:
+            f.write(bytes(raw))
+        with pytest.raises(ValueError, match="corrupt checkpoint"):
+            load_tree(path)
+
+
+def test_empty_and_garbage_files_rejected():
+    with tempfile.TemporaryDirectory() as td:
+        empty = os.path.join(td, "empty.ckpt")
+        open(empty, "wb").close()
+        with pytest.raises(ValueError, match="corrupt checkpoint"):
+            load_tree(empty)
+
+        garbage = os.path.join(td, "garbage.ckpt")
+        with open(garbage, "wb") as f:
+            f.write(b"\x00\x01\x02 not a checkpoint at all")
+        with pytest.raises(ValueError, match="corrupt checkpoint"):
+            load_tree(garbage)
+
+
+def test_wrong_envelope_rejected():
+    """A valid msgpack payload that is not a snapshot envelope (e.g. some
+    other tool's file dropped into the directory) is corruption too."""
+    import msgpack
+
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "other.ckpt")
+        with open(path, "wb") as f:
+            f.write(msgpack.packb({"something": "else"}, use_bin_type=True))
+        with pytest.raises(ValueError, match="corrupt checkpoint"):
+            load_tree(path)
+
+
+def test_shape_data_mismatch_rejected():
+    """Declared shape inconsistent with the byte payload must not load."""
+    import msgpack
+
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "bad.ckpt")
+        payload = {"meta": {}, "arrays": {
+            "a": {"dtype": "float32", "shape": [4, 4],
+                  "data": np.zeros(3, np.float32).tobytes()}}}
+        with open(path, "wb") as f:
+            f.write(msgpack.packb(payload, use_bin_type=True))
+        with pytest.raises(ValueError, match="corrupt checkpoint"):
+            load_tree(path)

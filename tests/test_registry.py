@@ -1,0 +1,390 @@
+"""Adapter lifecycle: the on-disk registry, the bounded hot-swap bank, and
+the serving acceptance contract - generation with adapters inserted,
+evicted, and re-inserted at runtime is token-identical to a statically
+built bank, and the jitted decode tick compiles exactly once across any
+number of swap cycles.
+"""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_cfg
+from repro.common import tree as tu
+from repro.common.types import AdapterCfg
+from repro.core.hadamard import (adapter_row, extract_bank_row, extract_delta,
+                                 init_bank, perturb_adapters,
+                                 validate_adapter_row)
+from repro.models import model as M
+from repro.serving.engine import MultiTaskEngine, ServeEngine
+from repro.serving.registry import (AdapterBank, AdapterRegistry,
+                                    BankFullError)
+from repro.serving.scheduler import Request, Scheduler
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def world():
+    """One tiny backbone + 4 task variants + their published registry."""
+    cfg = tiny_cfg(adapter=AdapterCfg(kind="hadamard"))
+    base = M.init_params(KEY, cfg)
+    variants = [perturb_adapters(base, jax.random.fold_in(KEY, t), scale=0.2)
+                for t in range(4)]
+    td = tempfile.TemporaryDirectory()
+    registry = AdapterRegistry(td.name)
+    for t, v in enumerate(variants):
+        registry.publish(f"task{t}", extract_delta(v))
+    yield dict(cfg=cfg, base=base, variants=variants, registry=registry)
+    td.cleanup()
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_publish_load_versions(world):
+    reg, variants = world["registry"], world["variants"]
+    delta, meta = reg.load("task1")
+    assert meta["name"] == "task1"
+    want = dict((p, np.asarray(v)) for p, v in
+                tu.flatten_with_paths(extract_delta(variants[1])))
+    got = dict((p, np.asarray(v)) for p, v in tu.flatten_with_paths(delta))
+    assert set(got) == set(want)
+    for p in want:
+        np.testing.assert_array_equal(got[p], want[p], err_msg=p)
+
+    # versions auto-increment and specific versions stay loadable
+    v = reg.publish("task1", extract_delta(variants[2]))
+    assert v == 1
+    assert reg.versions("task1") == [0, 1]
+    old, _ = reg.load("task1", version=0)
+    new, _ = reg.load("task1")  # newest wins by default
+    old_flat = np.concatenate(
+        [np.ravel(x) for _, x in tu.flatten_with_paths(old)])
+    new_flat = np.concatenate(
+        [np.ravel(x) for _, x in tu.flatten_with_paths(new)])
+    assert not np.array_equal(old_flat, new_flat)
+    # restore task1 for the other tests in this module
+    reg.publish("task1", extract_delta(variants[1]))
+
+
+def test_registry_names_contains_remove(world):
+    with tempfile.TemporaryDirectory() as td:
+        reg = AdapterRegistry(td)
+        reg.publish("a", extract_delta(world["variants"][0]))
+        reg.publish("b", extract_delta(world["variants"][1]))
+        assert reg.names() == ["a", "b"]
+        assert "a" in reg and "zzz" not in reg
+        reg.remove("a")
+        assert reg.names() == ["b"]
+        with pytest.raises(KeyError):
+            reg.load("a")
+
+
+def test_registry_rejects_bad_input(world):
+    reg = world["registry"]
+    with pytest.raises(ValueError, match="bad adapter name"):
+        reg.publish("../escape", extract_delta(world["variants"][0]))
+    with pytest.raises(ValueError, match="no /adapter/ leaves"):
+        reg.publish("nodelta", {"pooler": {"w": jnp.ones((2, 2))}})
+    with pytest.raises(KeyError, match="unknown"):
+        reg.load("unknown")
+
+
+# ---------------------------------------------------------------------------
+# bank surgery + validation primitives
+# ---------------------------------------------------------------------------
+
+
+def test_bank_row_roundtrip(world):
+    cfg, base = world["cfg"], world["base"]
+    bank = init_bank(base, 3)
+    row = adapter_row(extract_delta(world["variants"][2]))
+    from repro.core.hadamard import insert_bank_row
+
+    bank2 = insert_bank_row(bank, row, 1)
+    got = extract_bank_row(bank2, 1)
+    want = dict(tu.flatten_with_paths(row))
+    for p, v in tu.flatten_with_paths(got):
+        np.testing.assert_array_equal(np.asarray(v), np.asarray(want[p]),
+                                      err_msg=p)
+    # neighbouring rows keep the base adapter
+    base_row = dict(tu.flatten_with_paths(adapter_row(base)))
+    for p, v in tu.flatten_with_paths(extract_bank_row(bank2, 0)):
+        np.testing.assert_array_equal(np.asarray(v), np.asarray(base_row[p]),
+                                      err_msg=p)
+
+
+def test_validate_adapter_row_rejects_mismatches(world):
+    base = world["base"]
+    bank = init_bank(base, 2)
+    good = adapter_row(extract_delta(world["variants"][0]))
+    validate_adapter_row(bank, good)  # no raise
+
+    bad_shape = tu.map_with_path(
+        lambda p, v: v[..., :-1] if p.endswith("adapter/w") else v, good)
+    with pytest.raises(ValueError, match="does not fit bank"):
+        validate_adapter_row(bank, bad_shape)
+
+    missing = tu.map_with_path(
+        lambda p, v: None if p.endswith("adapter/b") else v, good)
+    with pytest.raises(ValueError, match="missing adapter leaf"):
+        validate_adapter_row(bank, missing)
+
+
+# ---------------------------------------------------------------------------
+# AdapterBank: residency, LRU, pins
+# ---------------------------------------------------------------------------
+
+
+def test_bank_lru_eviction_order(world):
+    bank = AdapterBank(world["cfg"], world["base"], 2, world["registry"])
+    r0 = bank.acquire("task0"); bank.release("task0")
+    r1 = bank.acquire("task1"); bank.release("task1")
+    assert sorted([r0, r1]) == [0, 1]
+    # touch task0 -> task1 becomes coldest -> task2 takes task1's row
+    bank.acquire("task0"); bank.release("task0")
+    r2 = bank.acquire("task2"); bank.release("task2")
+    assert r2 == r1
+    assert bank.resident == ["task0", "task2"]
+    assert bank.stats()["evictions"] == 1
+    # hits do not touch the registry
+    loads = bank.stats()["loads"]
+    bank.acquire("task0"); bank.release("task0")
+    assert bank.stats()["loads"] == loads
+
+
+def test_bank_pins_block_eviction(world):
+    bank = AdapterBank(world["cfg"], world["base"], 1, world["registry"])
+    bank.acquire("task0")  # pinned
+    with pytest.raises(BankFullError):
+        bank.acquire("task1")
+    bank.release("task0")
+    assert bank.acquire("task1") == 0  # now evictable
+    bank.release("task1")
+
+
+def test_bank_invalidate_picks_up_new_version(world):
+    cfg, base, variants = world["cfg"], world["base"], world["variants"]
+    with tempfile.TemporaryDirectory() as td:
+        reg = AdapterRegistry(td)
+        reg.publish("t", extract_delta(variants[0]))
+        bank = AdapterBank(cfg, base, 1, reg)
+        eng = MultiTaskEngine(cfg, bank)
+        toks = np.asarray(jax.random.randint(KEY, (1, 6), 0, 97))
+        out_v0 = eng.generate_for_adapters(toks, ["t"], 4)
+
+        reg.publish("t", extract_delta(variants[1]))  # roll forward
+        # resident row still serves v0 until invalidated
+        np.testing.assert_array_equal(
+            eng.generate_for_adapters(toks, ["t"], 4), out_v0)
+        assert bank.invalidate("t")
+        out_v1 = eng.generate_for_adapters(toks, ["t"], 4)
+        want = ServeEngine(cfg, variants[1]).generate(toks, 4)
+        np.testing.assert_array_equal(out_v1, want)
+
+        # pinned rows refuse invalidation
+        bank.acquire("t")
+        assert not bank.invalidate("t")
+        bank.release("t")
+
+
+def test_bank_unknown_name_raises_keyerror(world):
+    bank = AdapterBank(world["cfg"], world["base"], 2, world["registry"])
+    with pytest.raises(KeyError):
+        bank.acquire("never-published")
+
+
+# ---------------------------------------------------------------------------
+# acceptance: hot-swap parity + no-retrace stability
+# ---------------------------------------------------------------------------
+
+
+def test_hot_swap_parity_and_single_compile(world):
+    """ISSUE 3 acceptance: a 2-row bank serving 4 tasks through >= 3
+    insert/evict/re-insert cycles is token-identical to the static
+    4-task bank, and the jitted decode tick compiles exactly once."""
+    cfg, base, variants = world["cfg"], world["base"], world["variants"]
+    static = MultiTaskEngine(cfg, variants)
+    hot = MultiTaskEngine(cfg, AdapterBank(cfg, base, 2, world["registry"]))
+    toks = np.asarray(jax.random.randint(KEY, (2, 8), 0, 97))
+    sched = Scheduler(hot, num_slots=2, max_len=16)
+
+    # 6 rounds over 4 tasks through 2 rows: every round after the first
+    # evicts + reloads, and tasks 0/1 are re-inserted after eviction;
+    # every round decodes through the same persistent scheduler tick
+    for round_i, (a, b) in enumerate([(0, 1), (2, 3), (0, 1),
+                                      (3, 0), (1, 2), (0, 1)]):
+        want = static.generate_for_tasks(toks, np.array([a, b]), 5)
+        done, _ = sched.run([
+            Request(prompt=toks[0], max_new_tokens=5, adapter=f"task{a}"),
+            Request(prompt=toks[1], max_new_tokens=5, adapter=f"task{b}"),
+        ])
+        np.testing.assert_array_equal(done[0].tokens, want[0],
+                                      err_msg=f"round {round_i} task{a}")
+        np.testing.assert_array_equal(done[1].tokens, want[1],
+                                      err_msg=f"round {round_i} task{b}")
+
+    stats = hot.adapter_bank.stats()
+    assert stats["evictions"] >= 3, stats  # real churn, not cache hits
+    assert hot.trace_counts["decode"] == 1, (
+        f"decode tick retraced across swaps: {hot.trace_counts}")
+    assert hot.trace_counts["prefill"] == 1, hot.trace_counts
+    assert stats["insert_traces"] == 1, stats  # row scatter compiled once
+
+
+def test_scheduler_hot_swap_parity_under_churn(world):
+    """Continuous batching with named adapters: 2-row bank, 3 slots, 8
+    requests over 4 tasks - every completion token-identical to the
+    static engine; decode still compiled exactly once."""
+    cfg, base, variants = world["cfg"], world["base"], world["variants"]
+    static = MultiTaskEngine(cfg, variants)
+    hot = MultiTaskEngine(cfg, AdapterBank(cfg, base, 2, world["registry"]))
+    rs = np.random.RandomState(7)
+    prompts = [rs.randint(0, 97, size=(4 + i % 4,)) for i in range(8)]
+
+    sched = Scheduler(hot, num_slots=3, max_len=16)
+    done, _ = sched.run([
+        Request(prompt=prompts[i], max_new_tokens=3 + i % 3,
+                adapter=f"task{i % 4}")
+        for i in range(8)
+    ])
+    for c in done:
+        i = c.request_id
+        want = static.generate_for_tasks(
+            prompts[i].reshape(1, -1), np.array([i % 4]), len(c.tokens))
+        np.testing.assert_array_equal(c.tokens, want[0], err_msg=f"req{i}")
+        assert c.adapter == f"task{i % 4}"
+    assert hot.trace_counts["decode"] == 1, hot.trace_counts
+    # all pins released after the run
+    for t in range(4):
+        assert hot.adapter_bank.pins(f"task{t}") == 0
+
+
+def test_scheduler_bank_backpressure_no_deadlock(world):
+    """1-row bank + 2 slots + distinct tenants: admission of the second
+    tenant must defer (not crash) until the first retires, and the run
+    must drain with exact per-request budgets."""
+    cfg, base = world["cfg"], world["base"]
+    hot = MultiTaskEngine(cfg, AdapterBank(cfg, base, 1, world["registry"]))
+    rs = np.random.RandomState(3)
+    reqs = [Request(prompt=rs.randint(0, 97, size=(5,)),
+                    max_new_tokens=2 + i % 3, adapter=f"task{i % 3}")
+            for i in range(6)]
+    sched = Scheduler(hot, num_slots=2, max_len=16)
+    done, report = sched.run(reqs)
+    assert len(done) == 6
+    for i, c in enumerate(done):
+        assert len(c.tokens) == reqs[i].max_new_tokens
+    assert report["requests"] == 6
+
+
+def test_scheduler_submit_validates_names(world):
+    cfg, base, variants = world["cfg"], world["base"], world["variants"]
+    hot = MultiTaskEngine(cfg, AdapterBank(cfg, base, 2, world["registry"]))
+    sched = Scheduler(hot, num_slots=1, max_len=16)
+    with pytest.raises(KeyError, match="neither bank-resident"):
+        sched.submit(Request(prompt=np.zeros(4, np.int32), max_new_tokens=2,
+                             adapter="ghost"))
+
+    static = MultiTaskEngine(cfg, variants[:2])
+    sched2 = Scheduler(static, num_slots=1, max_len=16)
+    with pytest.raises(ValueError, match="AdapterBank"):
+        sched2.submit(Request(prompt=np.zeros(4, np.int32), max_new_tokens=2,
+                              adapter="task0"))
+
+    plain = ServeEngine(cfg, base)
+    sched3 = Scheduler(plain, num_slots=1, max_len=16)
+    with pytest.raises(ValueError, match="AdapterBank"):
+        sched3.submit(Request(prompt=np.zeros(4, np.int32), max_new_tokens=2,
+                              adapter="task0"))
+
+
+def test_registry_gc_respects_keep_for_delta_snapshots(world):
+    """Regression: CheckpointManager GC used to only count state.ckpt
+    snapshots, so delta-only registries grew without bound."""
+    with tempfile.TemporaryDirectory() as td:
+        reg = AdapterRegistry(td, keep=2)
+        for i in range(5):
+            reg.publish("t", extract_delta(world["variants"][i % 4]))
+        assert reg.versions("t") == [3, 4]
+        # newest version still loads after GC
+        _, meta = reg.load("t")
+        assert meta["step"] == 4
+
+
+def test_registry_read_paths_do_not_write(world):
+    """Membership tests / typo'd lookups must not create directories in
+    the registry (or resurrect a removed tenant's directory)."""
+    with tempfile.TemporaryDirectory() as td:
+        reg = AdapterRegistry(td)
+        reg.publish("real", extract_delta(world["variants"][0]))
+        assert "ghost" not in reg
+        assert reg.versions("ghost") == []
+        with pytest.raises(KeyError):
+            reg.load("ghost")
+        assert sorted(os.listdir(td)) == ["real"]
+        reg.remove("real")
+        assert "real" not in reg  # lookup after remove must not recreate
+        assert os.listdir(td) == []
+
+
+def test_generate_for_adapters_failure_releases_pins(world):
+    """Regression: a mid-loop acquire failure (more unique names than
+    bank rows) must release the pins it already took, or the bank wedges
+    permanently."""
+    cfg, base = world["cfg"], world["base"]
+    hot = MultiTaskEngine(cfg, AdapterBank(cfg, base, 2, world["registry"]))
+    toks = np.asarray(jax.random.randint(KEY, (3, 6), 0, 97))
+    with pytest.raises(BankFullError):
+        hot.generate_for_adapters(toks, ["task0", "task1", "task2"], 3)
+    bank = hot.adapter_bank
+    for name in list(bank.resident):
+        assert bank.pins(name) == 0, name
+    # the bank still serves (rows are evictable again)
+    out = hot.generate_for_adapters(toks[:1], ["task2"], 3)
+    want = ServeEngine(cfg, world["variants"][2]).generate(toks[:1], 3)
+    np.testing.assert_array_equal(out, want)
+
+
+def test_scheduler_adapter_removed_between_submit_and_admission(world):
+    """Runtime remove racing admission: the affected request completes
+    with finish_reason='error'; the rest of the stream is unharmed."""
+    cfg, base, variants = world["cfg"], world["base"], world["variants"]
+    with tempfile.TemporaryDirectory() as td:
+        reg = AdapterRegistry(td)
+        for t, v in enumerate(variants[:2]):
+            reg.publish(f"task{t}", extract_delta(v))
+        hot = MultiTaskEngine(cfg, AdapterBank(cfg, base, 2, reg))
+        sched = Scheduler(hot, num_slots=1, max_len=16)
+        toks = np.asarray(jax.random.randint(KEY, (1, 6), 0, 97))
+        ok = sched.submit(Request(prompt=toks[0], max_new_tokens=3,
+                                  adapter="task0"))
+        doomed = sched.submit(Request(prompt=toks[0], max_new_tokens=3,
+                                      adapter="task1"))
+        reg.remove("task1")  # vanishes after validation, before admission
+        while sched.pending or sched.active:
+            sched.step()
+        assert sched.completions[ok].finish_reason == "length"
+        want = ServeEngine(cfg, variants[0]).generate(toks, 3)
+        np.testing.assert_array_equal(sched.completions[ok].tokens, want[0])
+        err = sched.completions[doomed]
+        assert err.finish_reason == "error" and err.tokens.size == 0
+
+
+def test_registry_survives_process_style_reload(world):
+    """A second registry over the same directory (fresh process, same
+    disk) serves identical rows: the lifecycle is file-backed state."""
+    cfg, base, variants = world["cfg"], world["base"], world["variants"]
+    reg2 = AdapterRegistry(world["registry"].dir)
+    assert reg2.names() == ["task0", "task1", "task2", "task3"]
+    hot = MultiTaskEngine(cfg, AdapterBank(cfg, base, 2, reg2))
+    toks = np.asarray(jax.random.randint(KEY, (1, 6), 0, 97))
+    got = hot.generate_for_adapters(toks, ["task3"], 4)
+    want = ServeEngine(cfg, variants[3]).generate(toks, 4)
+    np.testing.assert_array_equal(got, want)

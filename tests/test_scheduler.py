@@ -163,6 +163,114 @@ def test_scheduler_topk_sampling_deterministic_per_seed():
     assert a == b
 
 
+# ---------------------------------------------------------------------------
+# seeded fuzz: randomized traffic vs the static-engine oracle
+# ---------------------------------------------------------------------------
+
+_FUZZ_WORLD = {}
+
+
+def _fuzz_world():
+    """Shared backbone + 4 named adapters + static oracle + hot engine
+    (2-row bank), built once: fuzz episodes reuse the compiled ticks."""
+    if not _FUZZ_WORLD:
+        import tempfile
+
+        from repro.core.hadamard import extract_delta, perturb_adapters
+        from repro.serving.registry import AdapterBank, AdapterRegistry
+
+        cfg = tiny_cfg(adapter=AdapterCfg(kind="hadamard"))
+        base = M.init_params(KEY, cfg)
+        variants = [
+            perturb_adapters(base, jax.random.fold_in(KEY, 50 + t), scale=0.2)
+            for t in range(4)
+        ]
+        td = tempfile.mkdtemp()
+        registry = AdapterRegistry(td)
+        for t, v in enumerate(variants):
+            registry.publish(f"task{t}", extract_delta(v))
+        _FUZZ_WORLD.update(
+            cfg=cfg,
+            oracle=MultiTaskEngine(cfg, variants),
+            hot=MultiTaskEngine(cfg, AdapterBank(cfg, base, 2, registry)),
+        )
+    return _FUZZ_WORLD
+
+
+def _oracle_tokens(oracle, prompt, task, budget, eos):
+    """Reference continuation: lock-step B=1 generation truncated at the
+    first EOS (inclusive), exactly the scheduler's retirement rule."""
+    out = np.asarray(oracle.generate_for_tasks(
+        prompt.reshape(1, -1), np.array([task]), budget))[0]
+    if eos is not None:
+        hit = np.flatnonzero(out == eos)
+        if hit.size:
+            out = out[: hit[0] + 1]
+    return out
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_scheduler_fuzz_against_static_oracle(seed):
+    """Seeded random traffic - staggered arrival ticks, random prompt
+    lengths, budgets, adapter names (through a 2-row hot-swap bank, so
+    admissions race evictions), and EOS patterns engineered to fire
+    mid-stream on ~a third of requests - must be token-exact against the
+    lock-step static oracle, request by request."""
+    w = _fuzz_world()
+    rs = np.random.RandomState(100 + seed)
+    n_req = 14
+    max_len = 16
+
+    reqs, wants = [], []
+    for i in range(n_req):
+        plen = int(rs.randint(2, 9))
+        budget = int(rs.randint(1, 7))
+        task = int(rs.randint(0, 4))
+        prompt = rs.randint(0, 97, size=(plen,)).astype(np.int32)
+        ref_full = _oracle_tokens(w["oracle"], prompt, task, budget, None)
+        mode = rs.randint(0, 3)
+        if mode == 0 and budget > 1:
+            eos = int(ref_full[rs.randint(0, budget)])  # fires mid-stream
+        elif mode == 1:
+            eos = 96  # may or may not appear - oracle truncates identically
+        else:
+            eos = None
+        arrival = int(rs.randint(0, 10))
+        reqs.append((arrival, Request(
+            prompt=prompt, max_new_tokens=budget, adapter=f"task{task}",
+            eos_id=eos)))
+        wants.append(_oracle_tokens(w["oracle"], prompt, task, budget, eos))
+
+    sched = Scheduler(w["hot"], num_slots=3, max_len=max_len)
+    ids = [None] * n_req
+    t = 0
+    while None in ids or sched.pending or sched.active:
+        for i, (arr, r) in enumerate(reqs):
+            if ids[i] is None and arr <= t:
+                ids[i] = sched.submit(r)
+        sched.step()
+        t += 1
+        assert t < 500, "fuzz episode failed to drain"
+
+    for i, rid in enumerate(ids):
+        c = sched.completions.pop(rid)
+        np.testing.assert_array_equal(
+            c.tokens, wants[i],
+            err_msg=f"seed {seed} req {i} ({reqs[i][1].adapter}, "
+                    f"eos={reqs[i][1].eos_id})")
+        want_reason = ("eos" if reqs[i][1].eos_id is not None
+                       and wants[i].size
+                       and wants[i][-1] == reqs[i][1].eos_id
+                       else "length")
+        assert c.finish_reason == want_reason, f"seed {seed} req {i}"
+
+    # lifecycle hygiene after every episode: no leaked pins, no retraces
+    bank = w["hot"].adapter_bank
+    for name in list(bank.resident):
+        assert bank.pins(name) == 0, name
+    assert w["hot"].trace_counts["decode"] == 1, w["hot"].trace_counts
+
+
 def test_generate_for_tasks_plumbs_sampling():
     """Regression: MultiTaskEngine.generate_for_tasks used to drop
     rng/top_k (multi-task serving was greedy-only)."""

@@ -212,6 +212,43 @@ def test_async_checkpointing():
         assert mgr.steps() == [1, 2, 3]
 
 
+def test_async_writer_gc_still_runs():
+    """Regression: steps() flushing pending writes made the async writer
+    join itself inside its own GC (killing the thread and skipping GC).
+    keep-k must hold under async writes, including delta-only snapshots."""
+    with tempfile.TemporaryDirectory() as td:
+        mgr = CheckpointManager(td, keep=2, async_write=True)
+        for s in range(1, 6):
+            mgr.save(s, {"v": jnp.asarray([s])})
+        assert mgr.steps() == [4, 5]  # flushes, then sees GC'd listing
+        tree, meta = mgr.restore()
+        assert meta["step"] == 5
+
+
+def test_async_save_visible_to_immediate_reads():
+    """Regression: restore()/latest()/steps() right after an async save
+    must flush the in-flight write first - a reader could otherwise miss
+    the snapshot (or see a half-renamed one) and resume from the wrong
+    step. Exercised many times since the race window is a thread handoff."""
+    with tempfile.TemporaryDirectory() as td:
+        mgr = CheckpointManager(td, keep=50, async_write=True)
+        for s in range(1, 21):
+            mgr.save(s, {"v": jnp.asarray([s])})
+            assert mgr.latest() == s  # no wait() by the caller
+            tree, meta = mgr.restore()
+            assert meta["step"] == s
+            np.testing.assert_array_equal(np.asarray(tree["v"]), [s])
+        assert mgr.steps() == list(range(1, 21))
+
+        # delta-only snapshots are discoverable under their own filename
+        mgr2 = CheckpointManager(td + "_d", keep=3, async_write=True)
+        mgr2.save_delta(7, {"adapter": {"w": jnp.ones(4)}})
+        assert mgr2.steps() == []  # no state.ckpt anywhere
+        assert mgr2.latest(filename="delta.ckpt") == 7
+        tree, meta = mgr2.restore(filename="delta.ckpt")
+        assert meta["step"] == 7
+
+
 # ---------------------------------------------------------------------------
 # training integration
 # ---------------------------------------------------------------------------
