@@ -11,10 +11,21 @@ from repro.configs import PAPER
 
 ROWS: List[Dict] = []
 
+# suites that legitimately recorded nothing this run (missing optional
+# input, unsupported backend, ...): an explicit `skip()` is the only way
+# a suite may produce zero rows without failing the harness (run.py
+# treats silent zero-row completion as a broken benchmark)
+SKIPPED: Dict[str, str] = {}
+
 
 def record(name: str, us_per_call: float, derived: str):
     ROWS.append({"name": name, "us": us_per_call, "derived": derived})
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def skip(suite: str, reason: str):
+    SKIPPED[suite] = reason
+    print(f"# {suite}: skipped ({reason})", flush=True)
 
 
 def timed(fn: Callable, *args, repeats: int = 3):

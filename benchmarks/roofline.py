@@ -107,7 +107,9 @@ def run(fast: bool = True, path: str = "results/dryrun.json"):
     try:
         records = load(path)
     except FileNotFoundError:
-        print(f"# roofline: {path} not found (run launch.dryrun first)")
+        from benchmarks.common import skip
+
+        skip("roofline", f"{path} not found (run launch.dryrun first)")
         return []
     from benchmarks.common import record as rec_row
 

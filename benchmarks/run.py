@@ -25,7 +25,7 @@ def main() -> None:
                     help="paper-scale budgets (slow)")
     ap.add_argument("--only", default="",
                     help="comma-separated subset of: table2,table3,table4,"
-                         "table5,fig5,kernels,roofline,swap")
+                         "table5,fig5,kernels,roofline,swap,quant")
     ap.add_argument("--json", default="",
                     help="write rows as JSON: {suites: {name: [{name, "
                          "us_per_call, derived}]}} plus run metadata")
@@ -35,14 +35,16 @@ def main() -> None:
 
     import jax
 
-    from benchmarks import (common, fig5_patterns, kernel_bench, roofline,
-                            swap_churn, table2_two_stage, table3_param_counts,
-                            table4_module_ablation, table5_layer_sweep)
+    from benchmarks import (common, fig5_patterns, kernel_bench, quant_bench,
+                            roofline, swap_churn, table2_two_stage,
+                            table3_param_counts, table4_module_ablation,
+                            table5_layer_sweep)
 
     suites = [
         ("table3", table3_param_counts.run),   # fast + exact: run first
         ("kernels", kernel_bench.run),
         ("swap", swap_churn.run),
+        ("quant", quant_bench.run),
         ("roofline", roofline.run),
         ("table2", table2_two_stage.run),
         ("table4", table4_module_ablation.run),
@@ -65,6 +67,13 @@ def main() -> None:
         start = len(common.ROWS)
         try:
             fn(fast=fast)
+            # a suite that "succeeds" while recording nothing is a silent
+            # skip (broken harness, short-circuited budget): fail loudly -
+            # the CI bench lane's trajectory point would otherwise just
+            # quietly lose its rows. Suites with a legitimate reason to
+            # sit a run out must declare it via common.skip().
+            if len(common.ROWS) == start and name not in common.SKIPPED:
+                raise RuntimeError(f"suite {name!r} recorded no rows")
         except Exception:
             failures.append(name)
             traceback.print_exc()
@@ -84,6 +93,7 @@ def main() -> None:
             "fast": fast,
             "elapsed_s": elapsed,
             "failures": failures,
+            "skipped": common.SKIPPED,
             "suites": per_suite,
         }
         out_dir = os.path.dirname(args.json)

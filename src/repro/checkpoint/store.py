@@ -23,10 +23,18 @@ except ImportError:
 import jax
 import ml_dtypes  # ships with jax
 
+from repro.quant.qtensor import QTensor
+
 _DTYPES = {
     "bfloat16": ml_dtypes.bfloat16,
     "float8_e4m3fn": ml_dtypes.float8_e4m3fn,
 }
+
+# Quantized leaves serialize as two sibling arrays under reserved names
+# (the dunders cannot collide with real param keys), so a calibrated+
+# quantized base is written once in int8/fp8 and `load_tree` reassembles
+# the QTensors - a cold restore never takes an fp32 detour.
+_QT_VALUES, _QT_SCALES = "__qvalues__", "__qscales__"
 
 
 def _np_dtype(name: str):
@@ -35,7 +43,10 @@ def _np_dtype(name: str):
 
 def _flatten(tree, prefix="") -> Dict[str, np.ndarray]:
     out = {}
-    if isinstance(tree, dict):
+    if isinstance(tree, QTensor):
+        out[f"{prefix}{_QT_VALUES}"] = np.asarray(tree.values)
+        out[f"{prefix}{_QT_SCALES}"] = np.asarray(tree.scales)
+    elif isinstance(tree, dict):
         for k, v in tree.items():
             out.update(_flatten(v, f"{prefix}{k}/"))
     elif tree is None:
@@ -53,7 +64,15 @@ def _unflatten(flat: Dict[str, np.ndarray]):
         for p in parts[:-1]:
             node = node.setdefault(p, {})
         node[parts[-1]] = v
-    return root
+
+    def reassemble(node):
+        if not isinstance(node, dict):
+            return node
+        if set(node) == {_QT_VALUES, _QT_SCALES}:
+            return QTensor(node[_QT_VALUES], node[_QT_SCALES])
+        return {k: reassemble(v) for k, v in node.items()}
+
+    return reassemble(root)
 
 
 def save_tree(path: str, tree, *, compress: bool = True,

@@ -78,6 +78,17 @@ _MODEL_DIM_FROM_END = {"col": 1, "row": 2, "embed": 2, "expert": 3}
 # collective-free only while every device holds every row.
 _ADAPTER_RE = re.compile(r"/adapter/")
 
+# Quantized leaves (repro.quant.QTensor) flatten to `<leaf>/values` and
+# `<leaf>/scales` paths. Both are matched against the base leaf's rule:
+# values shard exactly like the fp32 weight would; scales reuse the same
+# placement template, and because the contraction dim is collapsed to 1 in
+# the scale shape, `fit_spec` drops the 'model' entry there - i.e. scales
+# of row-parallel weights come out replicated along the sharded
+# contraction axis, while scales of column-parallel weights shard with
+# their output channels. No special cases: the fit_spec fallback is the
+# mechanism.
+_QT_LEAF_RE = re.compile(r"/(values|scales)$")
+
 
 def fit_spec(entries: Sequence, shape: Sequence[int], mesh,
              promote_model: bool = False) -> List:
@@ -114,7 +125,12 @@ def _match_rule(path: str) -> Optional[str]:
 
 def param_spec(path: str, shape: Sequence[int], cfg, mesh) -> P:
     """PartitionSpec for one param leaf. Stacked group leaves carry a
-    leading `repeats` dim which is never sharded (it is the scan axis)."""
+    leading `repeats` dim which is never sharded (it is the scan axis).
+    QTensor component paths (`.../values`, `.../scales`) resolve against
+    their base leaf's rule (see _QT_LEAF_RE note)."""
+    qt = _QT_LEAF_RE.search(path)
+    if qt is not None:
+        path = path[: qt.start()]
     if _ADAPTER_RE.search(path):
         return P()  # bank rows stay replicated (see _ADAPTER_RE note)
     kind = _match_rule(path)

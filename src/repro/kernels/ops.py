@@ -17,6 +17,7 @@ from repro.kernels import ref
 from repro.kernels.attention import flash_attention_tpu
 from repro.kernels.hadamard import fused_adapter_residual_norm, hadamard_affine
 from repro.kernels.multitask import multitask_hadamard_tpu
+from repro.kernels.quant import dequant_matmul_tpu
 from repro.kernels.rwkv6 import wkv6_tpu
 
 
@@ -68,6 +69,20 @@ def wkv6(r, k, v, w, u, impl: str = "auto", chunk: int = 64):
     if impl == "jnp":
         return ref.wkv6_ref(r, k, v, w, u)[0]
     return wkv6_tpu(r, k, v, w, u, chunk=chunk, interpret=impl == "interpret")
+
+
+def dequant_matmul(x, values, scales, impl: str = "auto"):
+    """x @ dequant(values, scales) without an fp32 weight materialization.
+
+    x: (M, K); values: (K, N) int8/fp8; scales: (1, N)/(N,) fp32 per-
+    output-channel (the QTensor layout). The jnp path is the autodiff-
+    friendly oracle; the Pallas path fuses the widen+scale into the MXU
+    epilogue and carries a custom VJP (dx only - weights are frozen).
+    """
+    impl = _resolve(impl)
+    if impl == "jnp":
+        return ref.dequant_matmul_ref(x, values, scales)
+    return dequant_matmul_tpu(x, values, scales, impl == "interpret")
 
 
 def multitask_hadamard(x, w_bank, b_bank, task_ids, impl: str = "auto"):

@@ -46,6 +46,18 @@ def multitask_hadamard_ref(x, w_bank, b_bank, task_ids):
     return x * w + b
 
 
+# --- quantized weights (repro.quant) ----------------------------------------
+
+
+def dequant_matmul_ref(x, values, scales):
+    """Oracle for the fused dequant-matmul: widen, scale, contract.
+
+    x: (M, K); values: (K, N) int8/fp8; scales: (1, N) or (N,) fp32 -
+    per-output-channel symmetric scales (the QTensor layout)."""
+    w = values.astype(jnp.float32) * scales.reshape(1, -1).astype(jnp.float32)
+    return (x.astype(jnp.float32) @ w).astype(x.dtype)
+
+
 # --- attention ---------------------------------------------------------------
 
 

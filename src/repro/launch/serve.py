@@ -82,6 +82,9 @@ def main():
                          "the continuous-batching scheduler")
     ap.add_argument("--fold", action="store_true",
                     help="fold the adapter into W_O (zero-overhead serving)")
+    ap.add_argument("--quant", default="", choices=["", "int8", "fp8"],
+                    help="quantize the frozen backbone's matmul weights at "
+                         "placement (adapter rows and norms stay fp32)")
     ap.add_argument("--mesh", default="",
                     help="'DATAxMODEL' (e.g. 2x4): serve the backbone "
                          "sharded over a host mesh")
@@ -109,14 +112,26 @@ def main():
         for t, params in enumerate(variants[:-1] or variants):
             registry.publish(f"task{t}", extract_delta(params))
 
+    quant = args.quant or None
     with use_mesh(mesh):  # engine captures the mesh; params placed sharded
         if registry is not None:
             engine = MultiTaskEngine(
-                cfg, AdapterBank(cfg, base, args.bank_size, registry))
+                cfg, AdapterBank(cfg, base, args.bank_size, registry),
+                quant=quant)
         elif variants is not None:
-            engine = MultiTaskEngine(cfg, variants)
+            engine = MultiTaskEngine(cfg, variants, quant=quant)
         else:
-            engine = ServeEngine(cfg, base, fold=args.fold)
+            engine = ServeEngine(cfg, base, fold=args.fold, quant=quant)
+    if quant:
+        from repro.quant import quant_summary
+
+        qs = quant_summary(engine.bank if isinstance(engine, MultiTaskEngine)
+                           else engine.params)
+        print(f"{quant} backbone: {qs['n_quantized_leaves']} matmul leaves, "
+              f"{qs['dense_bytes_fp32'] / 2**20:.2f} MiB fp32 -> "
+              f"{qs['quantized_bytes'] / 2**20:.2f} MiB "
+              f"({qs['ratio']:.2f}x); tree total "
+              f"{qs['total_bytes'] / 2**20:.2f} MiB")
 
     rs = np.random.RandomState(args.seed)
     n = args.requests

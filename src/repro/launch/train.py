@@ -46,6 +46,14 @@ def main():
     ap.add_argument("--save-every", type=int, default=0)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--quant", default="", choices=["", "int8", "fp8"],
+                    help="QPEFT: quantize the frozen trunk (int8/fp8) and "
+                         "train the fp32 adapter on top of it "
+                         "(decoder-LM path; needs a frozen-trunk strategy)")
+    ap.add_argument("--calibrate-batches", type=int, default=0,
+                    help="with --quant: run this many batches of "
+                         "activation-statistics calibration before "
+                         "quantizing (0 = plain absmax scales)")
     ap.add_argument("--mesh", default="",
                     help="'DATAxMODEL' (e.g. 2x4): train SPMD on a host "
                          "mesh (pair with XLA_FLAGS="
@@ -59,6 +67,10 @@ def main():
                     compress_grads=args.compress_grads)
 
     if cfg.family == "encoder":
+        if args.quant:
+            raise SystemExit("--quant targets the decoder-LM path; the "
+                             "two-stage encoder recipe manages its own "
+                             "states (quantize post-training for serving)")
         task = args.task or "sst2"
         data = TaskData(task, cfg.vocab_size, seq_len=args.seq, seed=args.seed)
         tc = TrainCfg(optim=ocfg, steps=args.steps, batch_size=args.batch,
@@ -78,7 +90,29 @@ def main():
         source = shard_batches(source, mesh)  # sharded device_put on the dp axes
     batches = Prefetcher(source)
     with use_mesh(mesh):  # use_mesh(None) is a no-op
-        state = make_state(jax.random.PRNGKey(args.seed), cfg, strat, ocfg)
+        params = stats = None
+        if args.quant and args.calibrate_batches:
+            from repro.models import model as M
+            from repro.quant import calibrate
+
+            params = M.init_params(jax.random.PRNGKey(args.seed), cfg)
+            cal = lm_batches(corpus, args.calibrate_batches, args.batch,
+                             args.seq, seed=args.seed + 1)
+            stats = calibrate(cfg, params, cal,
+                              max_batches=args.calibrate_batches)
+            print(f"calibrated {len(stats)} call sites over "
+                  f"{args.calibrate_batches} batches")
+        state = make_state(jax.random.PRNGKey(args.seed), cfg, strat, ocfg,
+                           params=params, quant=args.quant or None,
+                           quant_stats=stats)
+        if args.quant:
+            from repro.quant import quant_summary
+
+            qs = quant_summary(state["frozen"])
+            print(f"quantized trunk: {qs['n_quantized_leaves']} leaves, "
+                  f"{qs['dense_bytes_fp32'] / 2**20:.1f} MiB fp32 -> "
+                  f"{qs['quantized_bytes'] / 2**20:.1f} MiB "
+                  f"({qs['ratio']:.2f}x)")
         manager = None
         if args.ckpt_dir:
             manager = CheckpointManager(args.ckpt_dir, keep=3)

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from repro.common.types import AdapterCfg, ModelCfg, Slot
 from repro.models import flash
 from repro.models.layers import apply_rope, dense_init, rms_head_norm
+from repro.quant.qtensor import qdense
 
 INVALID_POS = jnp.iinfo(jnp.int32).max
 
@@ -118,8 +119,7 @@ def apply_attn(
     cdt = cfg.cdtype
     is_cross = kv_x is not None or (cache is not None and "ck" in cache)
 
-    wq = p["wq"].astype(cdt)
-    q = x @ wq
+    q = qdense(x, p["wq"], cdt, tag="attn/wq")
     if adapter is not None and acfg.kind == "lora":
         q = q + _lora_delta(x, adapter["qa"], adapter["qb"], acfg.lora_alpha,
                             acfg.lora_rank)
@@ -134,8 +134,8 @@ def apply_attn(
     k = v = None
     if not (is_cross and cache is not None):  # cross-decode skips k/v compute
         src = x if kv_x is None else kv_x
-        k = src @ p["wk"].astype(cdt)
-        v = src @ p["wv"].astype(cdt)
+        k = qdense(src, p["wk"], cdt, tag="attn/wk")
+        v = qdense(src, p["wv"], cdt, tag="attn/wv")
         if adapter is not None and acfg.kind == "lora":
             v = v + _lora_delta(src, adapter["va"], adapter["vb"],
                                 acfg.lora_alpha, acfg.lora_rank)
@@ -244,7 +244,7 @@ def apply_attn(
     if adapter is not None and acfg.kind == "hadamard" and acfg.position == "attn_concat":
         out = apply_hadamard(out, adapter)
 
-    y = out @ p["wo"].astype(cdt)
+    y = qdense(out, p["wo"], cdt, tag="attn/wo")
     if "bo" in p:
         y = y + p["bo"].astype(cdt)
 

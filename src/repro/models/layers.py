@@ -7,6 +7,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.common.types import ModelCfg
+from repro.quant.qtensor import qdense
 
 # ---------------------------------------------------------------------------
 # Initializers
@@ -93,16 +94,16 @@ def mlp_init(key, cfg: ModelCfg, d_in: Optional[int] = None, d_ff: Optional[int]
 
 
 def apply_mlp(p, cfg: ModelCfg, x, ia3=None):
-    h = x @ p["wi"].astype(cfg.cdtype)
+    h = qdense(x, p["wi"], cfg.cdtype, tag="mlp/wi")
     if "bi" in p:
         h = h + p["bi"].astype(cfg.cdtype)
     if cfg.gated_mlp:
-        h = act_fn(cfg.act)(h) * (x @ p["wg"].astype(cfg.cdtype))
+        h = act_fn(cfg.act)(h) * qdense(x, p["wg"], cfg.cdtype, tag="mlp/wg")
     else:
         h = act_fn(cfg.act)(h)
     if ia3 is not None:  # IA3 baseline: learned scale on the ffn activation
         h = h * ia3.astype(cfg.cdtype)
-    y = h @ p["wo"].astype(cfg.cdtype)
+    y = qdense(h, p["wo"], cfg.cdtype, tag="mlp/wo")
     if "bo" in p:
         y = y + p["bo"].astype(cfg.cdtype)
     return y

@@ -23,6 +23,7 @@ from repro.common.types import ModelCfg
 from repro.dist.api import constrain
 from repro.models.layers import apply_norm, dense_init, embed_init, norm_init, softcap
 from repro.models.program import group_apply, group_cache_init, group_init
+from repro.quant.qtensor import qdense
 
 # ---------------------------------------------------------------------------
 # Init
@@ -92,9 +93,12 @@ def embed_tokens(params, cfg: ModelCfg, tokens, positions=None, type_ids=None):
 
 def lm_logits(params, cfg: ModelCfg, h):
     if cfg.tie_embeddings:
+        # the embed table stays dense (it is a gather path, not a matmul
+        # weight - see quant.QUANT_PATTERNS), so tied logits do too
         logits = h @ params["embed"]["table"].astype(cfg.cdtype).T
     else:
-        logits = h @ params["lm_head"]["kernel"].astype(cfg.cdtype)
+        logits = qdense(h, params["lm_head"]["kernel"], cfg.cdtype,
+                        tag="lm_head")
     logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
     return constrain(logits, "dp", None, "model")
 
@@ -131,7 +135,8 @@ def _decoder_embed(params, cfg: ModelCfg, tokens, patches=None):
     S_txt = tokens.shape[1]
     pos_txt = jnp.arange(S_txt)
     if cfg.family == "vlm" and patches is not None:
-        img = (patches.astype(cfg.cdtype) @ params["vlm_proj"]["kernel"].astype(cfg.cdtype))
+        img = qdense(patches.astype(cfg.cdtype), params["vlm_proj"]["kernel"],
+                     cfg.cdtype, tag="vlm_proj")
         txt = embed_tokens(params, cfg, tokens, positions=pos_txt)
         x = jnp.concatenate([img, txt], axis=1)
     else:

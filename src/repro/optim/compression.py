@@ -13,6 +13,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.quant.qtensor import fake_quantize
+
 
 def ef_init(trainable):
     return jax.tree.map(
@@ -23,10 +25,11 @@ def ef_init(trainable):
 
 
 def _quantize_dequantize(x):
-    scale = jnp.max(jnp.abs(x)) / 127.0
-    scale = jnp.where(scale > 0, scale, 1.0)
-    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
-    return q.astype(jnp.float32) * scale
+    # one audited int8 implementation for the whole repo: this is the same
+    # symmetric-absmax primitive serve-side weight quantization uses
+    # (repro.quant), in its per-tensor layout - the wire format of a
+    # compressed all-reduce has one scale per gradient leaf.
+    return fake_quantize(x, "int8", axis=None)
 
 
 def compress(grads, err):

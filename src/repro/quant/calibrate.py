@@ -1,0 +1,116 @@
+"""Activation-statistics calibration for backbone quantization.
+
+Weight-only quantization needs to know which input channels the data
+actually drives: a per-output-channel absmax scale spends grid resolution
+on outlier weights even when the activations feeding them are near zero.
+The calibration pass runs a few batches from `data/pipeline` through the
+ordinary forward and accumulates, per matmul call site ("tag": attn/wq,
+mlp/wi, ...), the per-input-channel second moment of the activations.
+`quantize_tree(..., stats=...)` then runs an activation-weighted clipping
+search per leaf (see qtensor._best_clip).
+
+Collection mechanics: every projection in models/ flows through
+`qdense(x, w, tag=...)`. While a `collect_stats()` context is active,
+qdense emits the reduced (d_in,) sum-of-squares through
+`jax.debug.callback`, which fires with concrete values even from inside
+the `lax.scan` that drives the stacked layer program - so the ordinary
+scanned/remat'd forward IS the calibration forward, no shadow model walk.
+The per-tag statistic is therefore aggregated across the layers a stacked
+leaf scans over; the clip search applies one weighted metric to the whole
+(L, d_in, d_out) leaf, which is the granularity the scan program exposes.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_ACTIVE: Optional["_Collector"] = None
+
+
+class _Collector:
+    def __init__(self):
+        self._sumsq: Dict[str, np.ndarray] = {}
+        self._count: Dict[str, int] = {}
+
+    def add(self, tag: str, sumsq: np.ndarray, count: int) -> None:
+        sumsq = np.asarray(sumsq, np.float64)
+        if tag in self._sumsq and self._sumsq[tag].shape == sumsq.shape:
+            self._sumsq[tag] += sumsq
+            self._count[tag] += count
+        else:
+            self._sumsq[tag] = sumsq
+            self._count[tag] = count
+
+    def result(self) -> Dict[str, np.ndarray]:
+        return {
+            t: (self._sumsq[t] / max(self._count[t], 1)).astype(np.float32)
+            for t in self._sumsq
+        }
+
+
+def collecting() -> bool:
+    return _ACTIVE is not None
+
+
+def observe(tag: str, x) -> None:
+    """Called by qdense under an active collector: reduce the activation to
+    a per-input-channel sum of squares and ship it host-side. The reduction
+    happens on device; only a (d_in,) vector crosses the callback."""
+    col = _ACTIVE
+    if col is None:
+        return
+    n = int(np.prod(x.shape[:-1]))
+    sq = jnp.sum(jnp.square(jnp.asarray(x).astype(jnp.float32)),
+                 axis=tuple(range(x.ndim - 1)))
+    jax.debug.callback(lambda s, _tag=tag, _n=n: col.add(_tag, s, _n), sq)
+
+
+class collect_stats:
+    """Context manager: activates the collector and yields it.
+
+        with collect_stats() as cal:
+            model_forward(...)          # any number of batches
+        stats = cal.result()            # {tag: (d_in,) mean square}
+    """
+
+    def __enter__(self) -> _Collector:
+        global _ACTIVE
+        if _ACTIVE is not None:
+            raise RuntimeError("calibration collector already active")
+        _ACTIVE = _Collector()
+        return _ACTIVE
+
+    def __exit__(self, *exc) -> None:
+        global _ACTIVE
+        _ACTIVE = None
+
+
+def calibrate(cfg, params, batches: Iterable[dict],
+              max_batches: int = 8) -> Dict[str, np.ndarray]:
+    """Run up to `max_batches` from a data/pipeline iterator (dicts with
+    'tokens' [+ 'type_ids'/'patches']) through the family-appropriate
+    forward and return the per-tag activation statistics for
+    `quantize_tree(..., stats=...)`."""
+    from repro.models import model as M  # deferred: models import qdense
+
+    with collect_stats() as cal:
+        for i, batch in enumerate(batches):
+            if i >= max_batches:
+                break
+            tokens = jnp.asarray(batch["tokens"])
+            if cfg.family == "encoder":
+                M.forward_encoder(params, cfg, tokens, batch.get("type_ids"))
+            elif cfg.family == "encdec":
+                M.forward_encdec(params, cfg, jnp.asarray(batch["frames"]),
+                                 tokens)
+            else:
+                # forward_lm (not forward_hidden): the head projection is
+                # quantizable too, so its input stats must be collected
+                M.forward_lm(params, cfg, tokens,
+                             patches=batch.get("patches"))
+    # drain any pending debug callbacks before reading the accumulators
+    jax.effects_barrier()
+    return cal.result()

@@ -39,11 +39,25 @@ def sample_topk(logits, rng, k: int = 40, temperature: float = 1.0):
 
 
 class ServeEngine:
-    """Greedy/top-k generation over any decoder-family config."""
+    """Greedy/top-k generation over any decoder-family config.
 
-    def __init__(self, cfg: ModelCfg, params, *, fold: bool = False):
+    quant: None keeps the params as given; "int8"/"fp8" quantizes the
+    frozen backbone's matmul projections at placement time (after any
+    adapter folding), so device memory holds 1 byte/weight and decode
+    matmuls run through the fused dequant kernel. A tree that already
+    carries QTensor leaves (a quantized checkpoint restored cold) passes
+    through untouched - quantize_tree is idempotent.
+    """
+
+    def __init__(self, cfg: ModelCfg, params, *, fold: bool = False,
+                 quant: Optional[str] = None):
         if fold and cfg.adapter.kind == "hadamard":
             params = fold_adapter(params, cfg)
+        if quant:
+            from repro.quant import quantize_tree  # deferred: light path
+
+            params = quantize_tree(params, mode=quant)
+        self.quant = quant
         self.cfg = cfg
         self.mesh = current_mesh()
         self.params = self._place(params)
@@ -150,13 +164,16 @@ class MultiTaskEngine(ServeEngine):
     tick shape across any number of swaps - asserted by the registry tests.
     """
 
-    def __init__(self, cfg: ModelCfg, tasks):
+    def __init__(self, cfg: ModelCfg, tasks, *, quant: Optional[str] = None):
         from repro.serving.registry import AdapterBank  # cycle-free import
 
         self.adapter_bank = tasks if isinstance(tasks, AdapterBank) else None
         tree = (self.adapter_bank.tree if self.adapter_bank is not None
                 else build_bank(tasks))
-        super().__init__(cfg, tree, fold=False)
+        # quantize_tree touches only backbone matmul leaves: the stacked
+        # adapter rows and tuned norms stay fp32, so hot-swap row inserts
+        # and the per-request bank gather are untouched by quantization
+        super().__init__(cfg, tree, fold=False, quant=quant)
         if self.adapter_bank is not None:
             # the bank owns the (mesh-placed) live tree from here on: row
             # inserts donate and rebind it, so the engine must re-read it

@@ -23,11 +23,18 @@ from repro.models import model as M
 from repro.optim.adamw import adamw_init, adamw_update, clip_by_global_norm
 from repro.optim.compression import compress, ef_init
 from repro.optim.schedule import lr_at
+from repro.quant import is_qtensor, quantize_tree
 from repro.train.losses import loss_for
 
 
 def make_state(key, cfg: ModelCfg, strat: peft.Strategy, ocfg: OptimCfg,
-               stage: int = 2, params=None):
+               stage: int = 2, params=None, quant=None, quant_stats=None):
+    """quant="int8"/"fp8" enables QPEFT: the frozen trunk is quantized
+    after the PEFT partition, so the forward streams int8 weights through
+    the fused dequant kernel while the fp32 trainable subtree (adapter +
+    tuned norms) keeps exact gradients - the trunk-is-frozen invariant
+    from core/peft.py is precisely what makes this lossless for training.
+    """
     if params is None:
         params = M.init_params(key, cfg)
     else:
@@ -36,6 +43,17 @@ def make_state(key, cfg: ModelCfg, strat: peft.Strategy, ocfg: OptimCfg,
         params = jax.tree.map(jnp.array, params)
     mask = peft.trainable_mask(params, strat, stage=stage)
     trainable, frozen = tu.partition(params, mask)
+    if quant:
+        if any(is_qtensor(v) for v in jax.tree.leaves(
+                trainable, is_leaf=lambda v: v is None or is_qtensor(v))):
+            raise ValueError("trainable subtree contains quantized leaves")
+        frozen = quantize_tree(frozen, mode=quant, stats=quant_stats)
+        if not any(is_qtensor(v) for v in jax.tree.leaves(
+                frozen, is_leaf=lambda v: v is None or is_qtensor(v))):
+            raise ValueError(
+                f"quant={quant!r} quantized nothing: strategy "
+                f"{strat.name!r} trains the backbone matmuls (QPEFT needs "
+                "a frozen trunk)")
     state = {
         "step": jnp.zeros((), jnp.int32),
         "trainable": trainable,
