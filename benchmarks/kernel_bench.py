@@ -59,6 +59,13 @@ def run(fast: bool = True):
     _, us = timed(f, x)
     record("kernel/multitask_hadamard_jnp", us, f"tasks=8,shape={B}x{S}x{d}")
 
+    gate = (jnp.arange(8) % 2).astype(jnp.float32)  # half the rows pruned
+    f = jax.jit(lambda x: ops.masked_multitask_hadamard(
+        x, wb, bb, gate, tids, impl="jnp"))
+    _, us = timed(f, x)
+    record("kernel/masked_multitask_jnp", us,
+           f"tasks=8,gated=4,shape={B}x{S}x{d}")
+
 
 if __name__ == "__main__":
     run()

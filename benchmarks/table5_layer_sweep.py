@@ -2,6 +2,12 @@
 (top-k layers trainable via gradient gating). Claim validated: quality
 rises with unfrozen layers and saturates past ~2/3 of depth - the basis of
 the paper's 0.022 % variant.
+
+The layer gating runs through `repro.sparse.importance` (depth masks ->
+`mask_gate` grad gates -> `gated_param_count`): the paper table and the
+pruning subsystem exercise ONE implementation, so they cannot drift
+apart. `benchmarks/sparse_bench.py` extends this sweep into the full
+prune/pack/share serving story.
 """
 from __future__ import annotations
 
@@ -11,6 +17,7 @@ import jax
 
 from repro.core import peft
 from repro.data.synthetic import TaskData
+from repro.sparse import importance as imp
 from repro.train.loop import evaluate, overlay_by_path, run_train
 from repro.train.pretrain import pretrain_encoder
 from repro.train.steps import build_train_step, make_state, merged_params
@@ -47,13 +54,15 @@ def run(fast: bool = True, task: str = "sst2"):
             M.init_params(jax.random.PRNGKey(1), cfg2), stage1_params)
         st2 = make_state(jax.random.PRNGKey(1), cfg2, strat,
                          bc["stage2"].optim, params=params2)
-        gate = peft.layer_gate(params2, cfg2, top_layers=k)
-        step2 = build_train_step(cfg2, bc["stage2"].optim, gate=gate)
+        layer_mask = imp.depth_mask(cfg2, k)
+        step2 = build_train_step(cfg2, bc["stage2"].optim,
+                                 layer_mask=layer_mask)
         st2, _ = run_train(st2, step2, data.train_batches(steps, bs, seed=2),
                            steps=steps, log_every=0)
         m = evaluate(cfg2, merged_params(st2), data.eval_batches(bs), "acc")
         mask = peft.trainable_mask(params2, strat)
-        n = peft.gated_param_count(params2, mask, gate)
+        n = imp.gated_param_count(
+            params2, mask, imp.mask_gate(params2, cfg2, layer_mask))
         results[k] = (m, n)
         record(f"table5/top{k}layers",
                (time.perf_counter() - t0) * 1e6 / steps,

@@ -1,16 +1,22 @@
 """Paper §5 exploratory analysis: train Hadamard adapters on several tasks,
 then analyze the learned vectors - per-layer distributions, cross-task
-cosine similarity, and the shared-weight adapter proposal.
+cosine similarity, and the shared-weight adapter proposal - and emit the
+proposal as a `repro.sparse.shared` artifact a serving process can load
+(`load_shared` -> `shared_w_overlay` -> `AdapterBank(shared_w=True)`).
 
   PYTHONPATH=src python examples/patterns_analysis.py
 """
+import os
+
 import jax
 import numpy as np
 
+from repro.common import tree as tu
 from repro.common.types import OptimCfg, TrainCfg
 from repro.configs import PAPER
 from repro.core import patterns
 from repro.data.synthetic import TASKS, TaskData
+from repro.sparse import shared as shared_mod
 from repro.train.loop import two_stage_finetune
 from repro.train.pretrain import pretrain_encoder
 
@@ -52,6 +58,22 @@ def main():
     print(f"shared-weight adapter: one w ({shared_w.nbytes/1024:.1f} KiB "
           f"shared) + per-task b ({next(iter(per_task_b.values())).nbytes/1024:.1f} "
           f"KiB each) -> further param reduction for multi-task fleets")
+
+    # emit the proposal as a serving artifact: suggest_shared_weight's
+    # (L, d) vectors scattered back into adapter-tree leaves, saved via
+    # the checkpoint store, and verified loadable - the exact object
+    # `launch/serve --share-w` style deployments build their bank from
+    art = shared_mod.from_vectors(shared_w, per_task_b,
+                                  task_params["sst2"], cfg2)
+    os.makedirs("results", exist_ok=True)
+    path = "results/shared_adapter.ckpt"
+    shared_mod.save_shared(path, art)
+    back = shared_mod.load_shared(path)
+    assert back.tasks == sorted(task_params)
+    w0 = next(v for _, v in tu.flatten_with_paths(back.w) if v is not None)
+    print(f"wrote {path}: shared w + b for {back.tasks} "
+          f"({os.path.getsize(path)/1024:.1f} KiB on disk, "
+          f"w leaf {np.asarray(w0).shape})")
 
 
 if __name__ == "__main__":

@@ -24,6 +24,7 @@ import jax
 import ml_dtypes  # ships with jax
 
 from repro.quant.qtensor import QTensor
+from repro.sparse.prune import PackedRows
 
 _DTYPES = {
     "bfloat16": ml_dtypes.bfloat16,
@@ -36,6 +37,13 @@ _DTYPES = {
 # the QTensors - a cold restore never takes an fp32 detour.
 _QT_VALUES, _QT_SCALES = "__qvalues__", "__qscales__"
 
+# Packed sparse-adapter leaves (repro.sparse.PackedRows) likewise: the
+# layer bitmask, the kept rows, and the identity fill value serialize as
+# sibling arrays, so a pruned tenant's registry snapshot stores only its
+# active rows and restores as the same packed object - the on-disk form
+# IS the 2-3x-smaller one.
+_SP_MASK, _SP_ROWS, _SP_FILL = "__spmask__", "__sprows__", "__spfill__"
+
 
 def _np_dtype(name: str):
     return _DTYPES.get(name, np.dtype(name))
@@ -46,6 +54,10 @@ def _flatten(tree, prefix="") -> Dict[str, np.ndarray]:
     if isinstance(tree, QTensor):
         out[f"{prefix}{_QT_VALUES}"] = np.asarray(tree.values)
         out[f"{prefix}{_QT_SCALES}"] = np.asarray(tree.scales)
+    elif isinstance(tree, PackedRows):
+        out[f"{prefix}{_SP_MASK}"] = np.asarray(tree.mask)
+        out[f"{prefix}{_SP_ROWS}"] = np.asarray(tree.rows)
+        out[f"{prefix}{_SP_FILL}"] = np.asarray(tree.fill, np.float32)
     elif isinstance(tree, dict):
         for k, v in tree.items():
             out.update(_flatten(v, f"{prefix}{k}/"))
@@ -70,6 +82,9 @@ def _unflatten(flat: Dict[str, np.ndarray]):
             return node
         if set(node) == {_QT_VALUES, _QT_SCALES}:
             return QTensor(node[_QT_VALUES], node[_QT_SCALES])
+        if set(node) == {_SP_MASK, _SP_ROWS, _SP_FILL}:
+            return PackedRows(node[_SP_MASK], node[_SP_ROWS],
+                              float(node[_SP_FILL]))
         return {k: reassemble(v) for k, v in node.items()}
 
     return reassemble(root)

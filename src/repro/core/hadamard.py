@@ -124,20 +124,33 @@ def build_bank(param_list: List):
 
 
 def select_tasks(bank_params, task_ids):
-    """Resolve a bank into per-request adapters: (L, T, d) -> (L, B, d)."""
+    """Resolve a bank into per-request adapters: (L, T, d) -> (L, B, d).
+
+    Shared-w banks (repro.sparse) store the w leaves as a SINGLE row
+    (L, 1, d); the gather index is clamped per leaf so every request
+    resolves to that one shared row while b still gathers per task."""
 
     def sel(path, v):
         if ADAPTER_RE.search(path):
-            return jnp.take(v, task_ids, axis=-2)
+            idx = jnp.minimum(task_ids, v.shape[-2] - 1)
+            return jnp.take(v, idx, axis=-2)
         return v
 
     return tu.map_with_path(sel, bank_params)
 
 
-def init_bank(params, size: int):
+SHARED_W_RE = re.compile(r"/adapter/w$")
+
+
+def init_bank(params, size: int, shared_w: bool = False):
     """Tile one param tree into a T-row bank: adapter leaves (L, d) ->
     (L, T, d), every row a copy of `params`' adapter (identity rows when
     `params` is an untuned backbone). Non-adapter leaves are shared.
+
+    shared_w=True (repro.sparse factorized serving): the /adapter/w
+    leaves get ONE row (L, 1, d) - `params`' w IS the shared weight for
+    every tenant - while b keeps `size` per-tenant rows. `select_tasks`
+    clamps its gather to the single w row.
 
     Structurally identical to `build_bank([params] * size)` but without
     materializing `size` full trees; this is the empty bank a hot-swap
@@ -146,7 +159,8 @@ def init_bank(params, size: int):
 
     def one(path, leaf):
         if ADAPTER_RE.search(path):
-            return jnp.repeat(leaf[..., None, :], size, axis=-2)
+            n = 1 if shared_w and SHARED_W_RE.search(path) else size
+            return jnp.repeat(leaf[..., None, :], n, axis=-2)
         return leaf
 
     return tu.map_with_path(one, params)
@@ -162,12 +176,16 @@ def adapter_row(tree):
     return row
 
 
-def validate_adapter_row(bank, row) -> None:
+def validate_adapter_row(bank, row, *, shared_w: bool = False) -> None:
     """Check a row tree against a bank before surgery: every adapter leaf
     of the bank must be present in the row with the bank's per-row shape
     (bank (L, T, d) -> row (L, d)) and a castable dtype. Raises ValueError
     naming every mismatch - a corrupt or wrong-arch delta must fail loudly
-    before it is scattered into live serving state."""
+    before it is scattered into live serving state.
+
+    shared_w: the bank stores one shared w row (repro.sparse), so the row
+    may omit its /adapter/w leaves (and any it does carry are validated
+    but never written - see `insert_bank_row(skip=...)`)."""
     flat_row = dict(tu.flatten_with_paths(row))
     problems = []
     for path, leaf in tu.flatten_with_paths(bank):
@@ -176,6 +194,8 @@ def validate_adapter_row(bank, row) -> None:
         r = flat_row.pop(path, None)
         want = leaf.shape[:-2] + leaf.shape[-1:]
         if r is None:
+            if shared_w and SHARED_W_RE.search(path):
+                continue
             problems.append(f"missing adapter leaf {path} (want {want})")
         elif tuple(r.shape) != want:
             problems.append(
@@ -189,17 +209,24 @@ def validate_adapter_row(bank, row) -> None:
                          + "\n  ".join(problems))
 
 
-def insert_bank_row(bank, row, idx):
+def insert_bank_row(bank, row, idx, skip=None):
     """Write one task's adapters into bank row `idx` in place (jittable;
     idx may be traced). bank adapter leaves (L, T, d) get row leaves (L, d)
     scattered at T=idx; everything else passes through untouched. Jitted
     with the bank donated, this is the no-retrace hot-swap primitive: the
-    bank keeps its shape, so downstream jitted ticks never recompile."""
+    bank keeps its shape, so downstream jitted ticks never recompile.
+
+    skip: optional regex - matching paths are never written. Shared-w
+    banks (repro.sparse) pass /adapter/w$ here: their single shared row
+    must not be clobbered by one tenant's delta (the scatter index would
+    silently clamp onto it)."""
     flat_row = dict(tu.flatten_with_paths(row))
 
     def one(path, leaf):
         r = flat_row.get(path)
         if r is None or not ADAPTER_RE.search(path):
+            return leaf
+        if skip is not None and skip.search(path):
             return leaf
         return jax.lax.dynamic_update_index_in_dim(
             leaf, r.astype(leaf.dtype), idx, axis=-2)
@@ -219,16 +246,21 @@ def extract_bank_row(bank, idx: int):
     return tu.map_with_path(one, bank)
 
 
-def perturb_adapters(params, key, scale: float = 0.05):
+def perturb_adapters(params, key, scale: float = 0.05, leaves=("w", "b")):
     """Synthesize a 'fine-tuned' task variant: shift every Hadamard adapter
     leaf by scale * N(0, 1) under a per-leaf deterministic key (crc32 of
     the path - str hash() is salted per process). Demo/benchmark helper
     for building multi-task banks without running real fine-tunes.
-    """
+
+    leaves: which adapter components to touch - ("b",) builds the
+    shared-w/per-task-b world of paper Fig 5 (perturb w once with one key
+    for all tasks, then b per task)."""
     import zlib
 
+    pat = re.compile(r"/adapter/(%s)$" % "|".join(leaves))
+
     def one(path, leaf):
-        if re.search(r"/adapter/(w|b)$", path):
+        if pat.search(path):
             k = jax.random.fold_in(key, zlib.crc32(path.encode()))
             return leaf + scale * jax.random.normal(k, leaf.shape, leaf.dtype)
         return leaf

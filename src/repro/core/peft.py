@@ -17,10 +17,6 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Optional, Tuple
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
 from repro.common import tree as tu
 from repro.common.types import AdapterCfg, ModelCfg
 
@@ -134,50 +130,31 @@ def layer_gate(params, cfg: ModelCfg, top_layers: Optional[int]):
     """Gradient gate: 1.0 everywhere except stacked adapter/ffn_norm leaves
     of layers below (n_layers - top_layers), which get 0.0.
 
-    Returns a pytree of scalars / (repeats, 1...) arrays to multiply grads by.
+    Returns a pytree of scalars / (repeats, 1...) arrays to multiply grads
+    by. Thin wrapper over `repro.sparse.importance.mask_gate` (deferred
+    import: sparse builds on this module) - the general form takes ANY
+    layer mask, e.g. one derived from importance scores. top_layers is
+    clamped to [0, n_layers] (0 gates every layer off), preserving this
+    function's historically forgiving range.
     """
+    import numpy as np
+
+    from repro.sparse import importance as imp
+
     if top_layers is None:
-        return jax.tree.map(lambda v: 1.0, params)
-
-    n_total = sum(g.n_layers for g in cfg.groups)
-    first_enabled = max(0, n_total - top_layers)
-
-    # global layer index of each (group, repeat, slot_position)
-    offsets = {}
-    idx = 0
-    for gi, g in enumerate(cfg.groups):
-        offsets[gi] = idx
-        idx += g.n_layers
-
-    def gate(path: str, v):
-        import re
-
-        m = re.search(r"blocks/g(\d+)/slot(\d+)/(adapter|ffn_norm)/", path)
-        if not m:
-            return 1.0
-        gi, si = int(m.group(1)), int(m.group(2))
-        g = cfg.groups[gi]
-        repeats = g.repeats
-        nslots = len(g.slots)
-        layer_ids = offsets[gi] + np.arange(repeats) * nslots + si
-        gates = (layer_ids >= first_enabled).astype(np.float32)
-        shape = (repeats,) + (1,) * (v.ndim - 1)
-        return jnp.asarray(gates).reshape(shape)
-
-    return tu.map_with_path(gate, params)
+        return imp.mask_gate(params, cfg, None)
+    L = imp.n_layers(cfg)
+    k = max(0, min(int(top_layers), L))
+    mask = np.zeros((L,), bool)
+    if k:
+        mask[L - k:] = True
+    return imp.mask_gate(params, cfg, mask)
 
 
 def gated_param_count(params, mask, gate_tree) -> int:
-    """Trainable params after layer gating (for Table 5 fractions)."""
-    count = 0
-    for (leaf, m, g) in zip(
-        jax.tree.leaves(params), jax.tree.leaves(mask), jax.tree.leaves(gate_tree)
-    ):
-        if not m or leaf is None:
-            continue
-        if isinstance(g, (float, int)):
-            count += int(np.prod(leaf.shape)) * int(g != 0.0)
-        else:
-            per_layer = int(np.prod(leaf.shape[1:]))
-            count += int(np.asarray(g).sum()) * per_layer
-    return count
+    """Trainable params after layer gating (for Table 5 fractions).
+    Delegates to `repro.sparse.importance.gated_param_count` so the paper
+    table and the pruning subsystem share one counting rule."""
+    from repro.sparse import importance as imp
+
+    return imp.gated_param_count(params, mask, gate_tree)

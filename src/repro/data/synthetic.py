@@ -15,6 +15,7 @@ Labels are functions of token content so models can genuinely learn them:
 """
 from __future__ import annotations
 
+import zlib
 from dataclasses import dataclass
 from typing import Dict, Iterator, Optional
 
@@ -52,7 +53,12 @@ class TaskData:
         self.spec = TASKS[task]
         self.vocab = vocab_size
         self.seq_len = seq_len
-        rng = np.random.default_rng(abs(hash((task, seed))) % (2**31))
+        # crc32, not hash(): str hashing is salted per process, and a
+        # task's data must be byte-identical across processes (benches
+        # compare quality numbers between runs; trainer/server pairs
+        # regenerate the same eval sets)
+        rng = np.random.default_rng(
+            zlib.crc32(f"{task}:{seed}".encode()) % (2**31))
         if self.spec.pair:
             make = self._make_pair
         else:

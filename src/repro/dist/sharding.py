@@ -71,11 +71,15 @@ _RULES: Tuple[Tuple[re.Pattern, str], ...] = tuple(
 
 _MODEL_DIM_FROM_END = {"col": 1, "row": 2, "embed": 2, "expert": 3}
 
-# Hadamard adapter leaves - including their (L, T, d) bank-stacked form -
-# are pinned replicated by construction, not merely by falling through the
-# rule table: hot-swap row inserts are host-driven donated scatters on the
-# task axis, and the per-request bank gather inside the decode tick is
-# collective-free only while every device holds every row.
+# Hadamard adapter leaves - including their (L, T, d) bank-stacked form
+# and the single-row (L, 1, d) w leaves of a shared-w bank
+# (repro.sparse) - are pinned replicated by construction, not merely by
+# falling through the rule table: hot-swap row inserts are host-driven
+# donated scatters on the task axis, and the per-request bank gather
+# inside the decode tick is collective-free only while every device holds
+# every row. Sparse-serving layer masks/gates ((L,)/(L, T) bools, KBs)
+# are replicated for the same reason: the masked kernel reads every
+# request's row gate every tick (`adapter_gate_shardings` below).
 _ADAPTER_RE = re.compile(r"/adapter/")
 
 # Quantized leaves (repro.quant.QTensor) flatten to `<leaf>/values` and
@@ -274,3 +278,12 @@ def adapter_row_shardings(row, mesh):
     keeps the donated in-place insert a local write on every device - no
     resharding collective inside the hot-swap path."""
     return tu.map_with_path(lambda p, l: NamedSharding(mesh, P()), row)
+
+
+def adapter_gate_shardings(gates, mesh):
+    """NamedShardings for sparse-serving gate/mask arrays ((T,) or (L, T)
+    row gates consumed by the masked multitask kernel, see
+    kernels/sparse.py): fully replicated - they are bytes-sized, read by
+    every device every decode tick, and mutated by the same host-driven
+    hot-swap path as the adapter rows they gate."""
+    return tu.map_with_path(lambda p, l: NamedSharding(mesh, P()), gates)

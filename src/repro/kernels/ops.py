@@ -19,6 +19,7 @@ from repro.kernels.hadamard import fused_adapter_residual_norm, hadamard_affine
 from repro.kernels.multitask import multitask_hadamard_tpu
 from repro.kernels.quant import dequant_matmul_tpu
 from repro.kernels.rwkv6 import wkv6_tpu
+from repro.kernels.sparse import masked_multitask_hadamard_tpu
 
 
 def _on_tpu() -> bool:
@@ -91,3 +92,17 @@ def multitask_hadamard(x, w_bank, b_bank, task_ids, impl: str = "auto"):
         return ref.multitask_hadamard_ref(x, w_bank, b_bank, task_ids)
     return multitask_hadamard_tpu(x, w_bank, b_bank, task_ids,
                                   interpret=impl == "interpret")
+
+
+def masked_multitask_hadamard(x, w_bank, b_bank, gate, task_ids,
+                              impl: str = "auto"):
+    """Redundancy-aware bank serving (repro.sparse): per-row gate in
+    {0,1}; gated-off rows pass through as identity inside the fused op.
+    Gate all-ones is exactly `multitask_hadamard`. The Pallas path
+    carries a custom VJP (dx in-kernel, dw/db fp32 segment-sums)."""
+    impl = _resolve(impl)
+    if impl == "jnp":
+        return ref.masked_multitask_hadamard_ref(x, w_bank, b_bank, gate,
+                                                 task_ids)
+    return masked_multitask_hadamard_tpu(x, w_bank, b_bank, gate, task_ids,
+                                         impl == "interpret")

@@ -46,6 +46,19 @@ def multitask_hadamard_ref(x, w_bank, b_bank, task_ids):
     return x * w + b
 
 
+def masked_multitask_hadamard_ref(x, w_bank, b_bank, gate, task_ids):
+    """Redundancy-aware variant (repro.sparse): gate (T,) in {0,1} per
+    bank row; gated-off rows pass through as the identity INSIDE the op:
+
+        y_i = x_i + g[t_i] * (x_i * (w[t_i] - 1) + b[t_i])
+
+    With gate all-ones this is exactly multitask_hadamard_ref."""
+    w = w_bank[task_ids][:, None]
+    b = b_bank[task_ids][:, None]
+    g = gate.astype(x.dtype)[task_ids][:, None, None]
+    return x + g * (x * (w - 1.0) + b)
+
+
 # --- quantized weights (repro.quant) ----------------------------------------
 
 

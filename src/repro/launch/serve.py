@@ -40,12 +40,22 @@ from repro.serving.registry import AdapterBank, AdapterRegistry
 from repro.serving.scheduler import Request, Scheduler
 
 
-def build_params(key, cfg, tasks: int):
+def build_params(key, cfg, tasks: int, share_w: bool = False):
     """Backbone params, plus per-task adapter variants when tasks > 0
-    (distinct adapters per task, as if fine-tuned per task)."""
+    (distinct adapters per task, as if fine-tuned per task). share_w
+    builds the paper's Fig-5 world: ONE w perturbation common to every
+    task, per-task b - the regime the shared-w bank factorizes exactly."""
     base = M.init_params(key, cfg)
     if tasks <= 0:
         return base, None
+    if share_w:
+        stem = perturb_adapters(base, jax.random.fold_in(key, 7),
+                                leaves=("w",))
+        return base, [
+            perturb_adapters(stem, jax.random.fold_in(key, 100 + t),
+                             leaves=("b",))
+            for t in range(tasks)
+        ]
     return base, [
         perturb_adapters(base, jax.random.fold_in(key, 100 + t))
         for t in range(tasks)
@@ -73,6 +83,17 @@ def main():
     ap.add_argument("--bank-size", type=int, default=4,
                     help="device-resident adapter rows for --adapter-dir "
                          "(misses load from disk, cold rows are evicted LRU)")
+    ap.add_argument("--prune-to", type=int, default=0,
+                    help="repro.sparse: prune every tenant's adapter to its "
+                         "top-K layers and publish PACKED deltas (bitmask + "
+                         "active rows; pruned layers serve as identity). "
+                         "0 = dense; the paper's 0.022%% preset is K = 2L/3")
+    ap.add_argument("--share-w", action="store_true",
+                    help="repro.sparse shared-w serving (paper Fig 5: w is "
+                         "task-invariant): the bank stores ONE shared w "
+                         "row-set and per-tenant inserts scatter only b - "
+                         "T tenants cost (T+1) row-sets instead of 2T. "
+                         "Requires --adapter-dir")
     ap.add_argument("--top-k", type=int, default=0,
                     help=">0: per-request top-k sampling (greedy otherwise)")
     ap.add_argument("--stream", action="store_true",
@@ -95,7 +116,35 @@ def main():
     cfg = get_smoke(args.arch) if args.smoke else get(args.arch)
     cfg = peft.attach(cfg, peft.strategy("hadamard"))
     key = jax.random.PRNGKey(args.seed)
-    base, variants = build_params(key, cfg, args.tasks)
+    if args.share_w and not args.adapter_dir:
+        raise SystemExit("--share-w factorizes the hot-swap bank "
+                         "(pass --adapter-dir)")
+    base, variants = build_params(key, cfg, args.tasks, share_w=args.share_w)
+
+    layer_mask = None
+    if args.prune_to:
+        from repro.sparse import apply_layer_mask, depth_mask, n_layers
+
+        try:
+            layer_mask = depth_mask(cfg, args.prune_to)
+        except ValueError as e:
+            raise SystemExit(f"--prune-to: {e}")
+        if variants is not None:
+            # prune at the source: pruned layers are identity everywhere,
+            # so packed publishing below is an exact round trip
+            variants = [apply_layer_mask(v, cfg, layer_mask)
+                        for v in variants]
+        print(f"pruned serving: top {args.prune_to}/{n_layers(cfg)} "
+              "layers active, packed deltas published")
+
+    def task_delta(params):
+        """Registry payload for one tenant: packed when pruning."""
+        from repro.sparse import prune_delta
+
+        delta = extract_delta(params)
+        if layer_mask is not None:
+            delta = prune_delta(delta, cfg, layer_mask)
+        return delta
 
     registry = None
     if args.adapter_dir:
@@ -110,14 +159,22 @@ def main():
         # tenant onboarding)
         registry = AdapterRegistry(args.adapter_dir)
         for t, params in enumerate(variants[:-1] or variants):
-            registry.publish(f"task{t}", extract_delta(params))
+            registry.publish(f"task{t}", task_delta(params))
 
     quant = args.quant or None
     with use_mesh(mesh):  # engine captures the mesh; params placed sharded
         if registry is not None:
-            engine = MultiTaskEngine(
-                cfg, AdapterBank(cfg, base, args.bank_size, registry),
-                quant=quant)
+            bank_base = base
+            if args.share_w:
+                from repro.sparse import factorize, shared_w_overlay
+
+                sa = factorize(
+                    {f"task{t}": extract_delta(v)
+                     for t, v in enumerate(variants)}, cfg, mask=layer_mask)
+                bank_base = shared_w_overlay(base, sa)
+            bank = AdapterBank(cfg, bank_base, args.bank_size, registry,
+                               shared_w=args.share_w)
+            engine = MultiTaskEngine(cfg, bank, quant=quant)
         elif variants is not None:
             engine = MultiTaskEngine(cfg, variants, quant=quant)
         else:
@@ -200,7 +257,7 @@ def main():
         while sched.pending or sched.active or late:
             sched.step()
             if late and len(sched.completions) * 2 >= len(early):
-                registry.publish(hot, extract_delta(variants[-1]))
+                registry.publish(hot, task_delta(variants[-1]))
                 print(f"  ++ runtime add: published {hot!r}, submitting "
                       f"{len(late)} request(s) for it mid-stream")
                 ids += [sched.submit(r) for r in late]
@@ -224,6 +281,9 @@ def main():
         print(f"adapter bank: {bank['resident']}/{bank['size']} rows "
               f"resident, {bank['loads']} loads, {bank['evictions']} "
               f"evictions; decode traced {engine.trace_counts['decode']}x")
+        print(f"bank adapter bytes: {bank['adapter_bytes'] / 1024:.1f} KiB"
+              + (" (shared-w: one w row-set for all tenants)"
+                 if bank["shared_w"] else ""))
     else:
         done, report = sched.run(requests)
 

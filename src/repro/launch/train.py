@@ -46,6 +46,11 @@ def main():
     ap.add_argument("--save-every", type=int, default=0)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--prune-to", type=int, default=0,
+                    help="repro.sparse: train only the top-K layers' "
+                         "adapters (mask-gated gradients; the rest stay "
+                         "identity and pack away at publish time). 0 = all "
+                         "layers; the paper's 0.022%% variant is K = 2L/3")
     ap.add_argument("--quant", default="", choices=["", "int8", "fp8"],
                     help="QPEFT: quantize the frozen trunk (int8/fp8) and "
                          "train the fp32 adapter on top of it "
@@ -66,6 +71,17 @@ def main():
     ocfg = OptimCfg(lr=args.lr, total_steps=args.steps,
                     compress_grads=args.compress_grads)
 
+    layer_mask = None
+    if args.prune_to:
+        from repro.sparse.importance import depth_mask, n_layers
+
+        try:
+            layer_mask = depth_mask(cfg, args.prune_to)
+        except ValueError as e:
+            raise SystemExit(f"--prune-to: {e}")
+        print(f"pruned training: top {args.prune_to}/{n_layers(cfg)} "
+              "layers' adapters unfrozen (mask-gated gradients)")
+
     if cfg.family == "encoder":
         if args.quant:
             raise SystemExit("--quant targets the decoder-LM path; the "
@@ -77,7 +93,8 @@ def main():
                       seq_len=args.seq, log_every=10)
         res = two_stage_finetune(
             jax.random.PRNGKey(args.seed), cfg, args.peft, data,
-            stage1=tc, stage2=tc, metric=TASKS[task].metric)
+            stage1=tc, stage2=tc, metric=TASKS[task].metric,
+            layer_mask=layer_mask)
         print(f"final {TASKS[task].metric}: {res['final_metric']:.4f}")
         return
 
@@ -122,7 +139,7 @@ def main():
                 restored, meta = manager.restore()
                 state = restore_into(state, restored)
                 print(f"resumed from step {meta['step']}")
-        step = build_train_step(cfg, ocfg)
+        step = build_train_step(cfg, ocfg, layer_mask=layer_mask)
         state, hist = run_train(state, step, batches, steps=args.steps,
                                 log_every=10, manager=manager,
                                 save_every=args.save_every,

@@ -24,6 +24,18 @@ adapters that come and go at runtime. The pieces:
     an unpinned row, so a mid-decode request can never have its adapter
     swapped out from under it.
 
+Redundancy-aware serving (repro.sparse) plugs in at both layers:
+registries publish PACKED sparse deltas (bitmask + active-layer rows
+only, 2-3x smaller on disk) unchanged - the checkpoint store serializes
+`PackedRows` natively - and the bank unpacks them to identity-filled
+dense rows at insert, so the device bank keeps its fixed shape and mixed
+sparse/dense tenants share one compiled decode tick. Each resident row's
+layer mask is pinned alongside it (`mask_of`/`gates`, consumed by the
+masked multitask kernel and the byte accounting). A bank built with
+`shared_w=True` exploits the paper's Fig-5 finding directly: its
+/adapter/w leaves hold ONE shared row ((L, 1, d)) while per-tenant
+inserts scatter only `b` - T tenants cost (T+1) row-sets instead of 2T.
+
 `MultiTaskEngine` accepts an `AdapterBank` in place of a static param
 list, and `serving/scheduler.py` resolves `Request.adapter` names through
 it at admission time (see those modules).
@@ -42,10 +54,11 @@ import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.common import tree as tu
-from repro.core.hadamard import (adapter_row, init_bank, insert_bank_row,
-                                 validate_adapter_row)
+from repro.core.hadamard import (SHARED_W_RE, adapter_row, init_bank,
+                                 insert_bank_row, validate_adapter_row)
 from repro.dist.api import use_mesh
 from repro.dist.sharding import adapter_row_shardings
+from repro.sparse import prune as sparse_prune
 
 _NAME_RE = re.compile(r"^[A-Za-z0-9][A-Za-z0-9._-]*$")
 
@@ -173,28 +186,36 @@ class AdapterBank:
     can never retrace the decode path.
     """
 
-    def __init__(self, cfg, base_params, size: int, registry: AdapterRegistry):
+    def __init__(self, cfg, base_params, size: int, registry: AdapterRegistry,
+                 *, shared_w: bool = False, shared_w_atol: float = 0.1):
         if size < 1:
             raise ValueError("bank size must be >= 1")
         self.cfg = cfg
         self.size = size
         self.registry = registry
+        self.shared_w = shared_w
+        self.shared_w_atol = shared_w_atol
         self.mesh = None
         self._rows: "OrderedDict[str, int]" = OrderedDict()  # LRU: name->row
         self._pins: Dict[str, int] = {}
+        self._masks: Dict[str, np.ndarray] = {}  # name -> (L,) layer mask
         self._free: List[int] = list(range(size))
         self.loads = 0      # registry loads (misses)
         self.evictions = 0  # rows displaced to make room
         self._insert_traces = 0
 
+        skip = SHARED_W_RE if shared_w else None
+
         def _ins(adapters, row, idx):
             self._insert_traces += 1  # trace-time only: retrace detector
-            return insert_bank_row(adapters, row, idx)
+            return insert_bank_row(adapters, row, idx, skip=skip)
 
         self._insert = jax.jit(_ins, donate_argnums=(0,))
         # identity rows until tasks are loaded; the engine re-places this
-        # tree under its mesh and hands it back via attach().
-        self.attach(init_bank(base_params, size), None)
+        # tree under its mesh and hands it back via attach(). shared_w:
+        # base_params' w IS every tenant's w (see shared.shared_w_overlay)
+        # and is stored once.
+        self.attach(init_bank(base_params, size, shared_w=shared_w), None)
 
     # -- engine plumbing -----------------------------------------------------
 
@@ -248,8 +269,18 @@ class AdapterBank:
                 f"adapter {name!r}")
 
         delta, _meta = self.registry.load(name)
-        row_tree = adapter_row(delta)
-        validate_adapter_row(self._adapters, row_tree)
+        # packed sparse deltas (repro.sparse) unpack to identity-filled
+        # dense rows so the scatter below keeps the bank's fixed shape
+        # (mixed sparse/dense tenants share one compiled decode tick -
+        # zero retraces by construction). Validation runs BEFORE the
+        # layer-mask read: a wrong-arch delta must die in the loud
+        # every-mismatch ValueError, not in delta_mask's layer indexing.
+        row_tree = sparse_prune.unpack_delta(adapter_row(delta))
+        validate_adapter_row(self._adapters, row_tree,
+                             shared_w=self.shared_w)
+        if self.shared_w:
+            self._check_shared_w(name, row_tree)
+        mask = sparse_prune.delta_mask(delta, self.cfg)
 
         if self._free:
             idx = self._free.pop(0)
@@ -257,6 +288,7 @@ class AdapterBank:
             victim = next(n for n in self._rows if not self._pins.get(n, 0))
             idx = self._rows.pop(victim)
             self._pins.pop(victim, None)
+            self._masks.pop(victim, None)
             self.evictions += 1
 
         row_tree = jax.tree.map(
@@ -272,7 +304,33 @@ class AdapterBank:
         self.loads += 1
         self._rows[name] = idx
         self._pins[name] = 1
+        self._masks[name] = mask
         return idx
+
+    def _check_shared_w(self, name: str, row_tree) -> None:
+        """Shared-w banks never write a tenant's /adapter/w leaves
+        (insert skips them), so a tenant whose published w genuinely
+        deviates from the bank's shared row would silently decode under
+        the wrong transform. Fail loudly instead: the operator should
+        publish b-only deltas for shareable tenants and serve outliers
+        from a dense bank (core/patterns.consistency_report is the
+        detector for which regime a tenant is in)."""
+        bank_w = dict(tu.flatten_with_paths(self._adapters))
+        worst, worst_path = 0.0, None
+        for path, r in tu.flatten_with_paths(row_tree):
+            if r is None or not SHARED_W_RE.search(path):
+                continue
+            shared_row = np.asarray(bank_w[path])[..., 0, :]
+            dev = float(np.max(np.abs(np.asarray(r) - shared_row)))
+            if dev > worst:
+                worst, worst_path = dev, path
+        if worst > self.shared_w_atol:
+            raise ValueError(
+                f"adapter {name!r}: published w deviates from the bank's "
+                f"shared w by {worst:.4f} (> atol {self.shared_w_atol}) at "
+                f"{worst_path}; a shared-w bank would silently serve the "
+                "shared row instead - publish a b-only delta or serve this "
+                "tenant from a dense bank")
 
     def release(self, name: str) -> None:
         """Drop one pin; the row stays resident (warm) until evicted."""
@@ -298,6 +356,7 @@ class AdapterBank:
         if row is None:
             return False
         self._pins.pop(name, None)
+        self._masks.pop(name, None)
         self._free.append(row)
         return True
 
@@ -310,6 +369,29 @@ class AdapterBank:
     def pins(self, name: str) -> int:
         return self._pins.get(name, 0)
 
+    def mask_of(self, name: str) -> Optional[np.ndarray]:
+        """(L,) active-layer mask pinned with a resident row (all-ones for
+        dense tenants), or None if the name is not resident."""
+        m = self._masks.get(name)
+        return None if m is None else m.copy()
+
+    def gates(self) -> np.ndarray:
+        """(L, size) fp32 row gates in bank-row order for the masked
+        multitask kernel (kernels/sparse.py): column r is row r's layer
+        mask; unloaded rows hold identity adapters, so their gates are 0.
+        Place on a mesh with `dist.sharding.adapter_gate_shardings`."""
+        L = len(next(iter(self._masks.values()))) if self._masks else \
+            sum(g.n_layers for g in self.cfg.groups)
+        gates = np.zeros((L, self.size), np.float32)
+        for name, r in self._rows.items():
+            gates[:, r] = self._masks[name].astype(np.float32)
+        return gates
+
+    def adapter_bytes(self) -> int:
+        """Device bytes of the bank's stacked adapter leaves (the number
+        shared-w mode shrinks: one w row-set instead of `size`)."""
+        return tu.tree_bytes(self._adapters)
+
     def stats(self) -> dict:
         return {
             "size": self.size,
@@ -317,4 +399,6 @@ class AdapterBank:
             "loads": self.loads,
             "evictions": self.evictions,
             "insert_traces": self._insert_traces,
+            "shared_w": self.shared_w,
+            "adapter_bytes": self.adapter_bytes(),
         }

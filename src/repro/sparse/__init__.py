@@ -1,0 +1,101 @@
+"""repro.sparse: redundancy-aware adapter pruning + shared-weight serving.
+
+The paper's second headline result (Table 5 / Fig 4) is that Hadamard
+adapter layers are redundant: unfreezing only the top ~2/3 of layers
+reaches the dense adapter's quality at 0.022% trainable parameters
+(vs 0.033% dense), and Fig 5 shows the learned `w` vectors are nearly
+identical across tasks while `b` is task-specific. Before this package
+those facts were only *measured* (core/patterns.py, the Table-5 bench);
+here they are *exploited* end to end:
+
+  * `importance.py` - per-layer adapter importance scoring (deviation-
+    from-identity magnitudes, cross-task aggregation unified with
+    core/patterns.py, ablation delta-quality via the existing eval loop)
+    plus the layer-mask gradient gating every consumer (train loop,
+    Table-5 bench, launchers) now shares.
+  * `prune.py` - quality-budgeted layer-mask search and the packed
+    `PackedRows`/sparse-delta representation (bitmask + rows for active
+    layers only, exact dense<->sparse round trip, checkpoint-store
+    native); the paper's 0.022% variant ships as a preset.
+  * `shared.py` - shared-`w`/per-task-`b` factorization of the adapter
+    bank: T tenants store ONE `w` row-set plus T (optionally packed) `b`
+    row-sets, and `serving.AdapterBank(shared_w=...)` serves them from a
+    bank whose `w` leaves carry a single row.
+
+Serving keeps its zero-retrace contract throughout: packed rows are
+unpacked to identity-filled dense rows at insert time, so mixed
+sparse/dense/shared tenants decode through one compiled tick.
+"""
+from repro.sparse.importance import (
+    ablate_layers,
+    ablation_importance,
+    apply_layer_mask,
+    cross_task_importance,
+    depth_mask,
+    gated_param_count,
+    leaf_layer_ids,
+    magnitude_importance,
+    mask_gate,
+    n_layers,
+    topk_mask,
+)
+from repro.sparse.prune import (
+    PRESETS,
+    PackedRows,
+    delta_mask,
+    is_packed,
+    pack_delta,
+    pack_leaf,
+    packed_bytes,
+    preset_mask,
+    prune_delta,
+    search_mask,
+    sparse_param_stats,
+    unpack_delta,
+    unpack_leaf,
+)
+from repro.sparse.shared import (
+    SharedAdapter,
+    bank_bytes_report,
+    factorize,
+    from_vectors,
+    load_shared,
+    save_shared,
+    shared_w_overlay,
+    task_row,
+)
+
+__all__ = [
+    "PRESETS",
+    "PackedRows",
+    "SharedAdapter",
+    "ablate_layers",
+    "ablation_importance",
+    "apply_layer_mask",
+    "bank_bytes_report",
+    "cross_task_importance",
+    "delta_mask",
+    "depth_mask",
+    "factorize",
+    "from_vectors",
+    "gated_param_count",
+    "is_packed",
+    "leaf_layer_ids",
+    "load_shared",
+    "magnitude_importance",
+    "mask_gate",
+    "n_layers",
+    "pack_delta",
+    "pack_leaf",
+    "packed_bytes",
+    "preset_mask",
+    "prune_delta",
+    "save_shared",
+    "search_mask",
+    "shared_w_overlay",
+    "sparse_param_stats",
+    "task_row",
+    "topk_mask",
+    "unpack_delta",
+    "unpack_leaf",
+]

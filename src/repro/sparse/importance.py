@@ -1,0 +1,198 @@
+"""Per-layer adapter importance scoring and layer-mask gradient gating.
+
+A Hadamard adapter layer is exactly redundant when its learned affine is
+the identity (w=1, b=0) - "equivalent to not adding any adapter" (paper
+3.1). Importance is therefore measured as deviation from identity:
+
+  * `magnitude_importance` - |w-1| and |b| magnitudes per layer, the
+    zero-extra-compute signal available from any trained adapter.
+  * `cross_task_importance` - the same signal aggregated over several
+    tasks' adapters (unifying the cross-task statistics in
+    core/patterns.py): a layer that stays near-identity on EVERY task is
+    structurally redundant, not just task-incidentally so.
+  * `ablation_importance` - delta-quality scoring through the existing
+    eval loop: ablate one layer's adapter to identity, re-evaluate, and
+    charge the layer the quality it was carrying.
+
+A layer MASK is a host-side (n_layers,) bool array in global layer order
+(the order of `core.hadamard.adapter_vectors`). `mask_gate` turns a mask
+into the gradient-gate pytree `build_train_step(gate=...)` consumes, so
+pruned-from-the-start training, the Table-5 sweep, and the launchers all
+gate through one implementation (`core.peft.layer_gate` delegates here).
+"""
+from __future__ import annotations
+
+import re
+from typing import Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.common import tree as tu
+from repro.common.types import ModelCfg
+from repro.core.hadamard import adapter_vectors
+
+_LAYER_RE = re.compile(r"blocks/g(\d+)/slot(\d+)/")
+_GATED_RE = re.compile(r"/(adapter|ffn_norm)/")
+
+
+def n_layers(cfg: ModelCfg) -> int:
+    return sum(g.n_layers for g in cfg.groups)
+
+
+def leaf_layer_ids(cfg: ModelCfg, path: str) -> Optional[np.ndarray]:
+    """Global layer ids of a stacked group leaf: (repeats,) ints, or None
+    for non-block leaves (embeddings, heads). Layer order matches
+    `adapter_vectors`: groups in config order, repeats within a group,
+    slots within a repeat."""
+    m = _LAYER_RE.search(path)
+    if m is None:
+        return None
+    gi, si = int(m.group(1)), int(m.group(2))
+    offset = sum(g.n_layers for g in cfg.groups[:gi])
+    g = cfg.groups[gi]
+    return offset + np.arange(g.repeats) * len(g.slots) + si
+
+
+# ---------------------------------------------------------------------------
+# Masks
+# ---------------------------------------------------------------------------
+
+
+def depth_mask(cfg: ModelCfg, top_layers: int) -> np.ndarray:
+    """Keep the top `top_layers` layers (the paper's Table-5 axis)."""
+    L = n_layers(cfg)
+    if not 1 <= top_layers <= L:
+        raise ValueError(f"top_layers must be in [1, {L}], got {top_layers}")
+    mask = np.zeros((L,), bool)
+    mask[L - top_layers:] = True
+    return mask
+
+
+def topk_mask(scores: np.ndarray, k: int) -> np.ndarray:
+    """Keep the k highest-importance layers (ties broken toward depth,
+    matching the paper's observation that later layers matter more)."""
+    scores = np.asarray(scores, np.float64)
+    if not 1 <= k <= scores.shape[0]:
+        raise ValueError(f"k must be in [1, {scores.shape[0]}], got {k}")
+    # stable argsort on (score, layer index): equal scores keep the deeper
+    order = np.argsort(scores + np.arange(scores.shape[0]) * 1e-12)
+    mask = np.zeros(scores.shape[0], bool)
+    mask[order[-k:]] = True
+    return mask
+
+
+# ---------------------------------------------------------------------------
+# Importance scores
+# ---------------------------------------------------------------------------
+
+
+def magnitude_importance(params, cfg: ModelCfg) -> np.ndarray:
+    """(L,) deviation-from-identity score: mean|w-1| + mean|b| per layer."""
+    vecs = adapter_vectors(params, cfg)
+    return (np.abs(vecs["w"] - 1.0).mean(axis=1)
+            + np.abs(vecs["b"]).mean(axis=1))
+
+
+def cross_task_importance(task_params: Dict[str, dict],
+                          cfg: ModelCfg) -> np.ndarray:
+    """(L,) importance aggregated over tasks: the per-task magnitude
+    scores averaged. Pairs with core/patterns.cross_task_similarity: the
+    similarity heatmaps say WHICH component is shareable (w), this says
+    WHICH layers are worth keeping at all."""
+    if not task_params:
+        raise ValueError("need at least one task's params")
+    scores = [magnitude_importance(p, cfg) for p in task_params.values()]
+    return np.mean(scores, axis=0)
+
+
+def apply_layer_mask(params, cfg: ModelCfg, mask: np.ndarray):
+    """Reset adapters of masked-OFF layers to identity (w=1, b=0). Other
+    leaves (norms, backbone) pass through untouched; this is the dense
+    form of pruning and the ablation primitive."""
+    mask = np.asarray(mask, bool)
+    if mask.shape != (n_layers(cfg),):
+        raise ValueError(f"mask shape {mask.shape} != ({n_layers(cfg)},)")
+
+    from repro.sparse.prune import is_packed  # call-time: no import cycle
+
+    def one(path: str, v):
+        m = re.search(r"/adapter/(w|b)$", path)
+        ids = leaf_layer_ids(cfg, path)
+        if m is None or ids is None:
+            return v
+        if is_packed(v):
+            raise ValueError(
+                f"{path} is a PackedRows leaf; apply_layer_mask works on "
+                "dense trees - run prune.unpack_delta first (prune_delta "
+                "does this for you)")
+        keep = np.asarray(mask[ids], np.float32).reshape(
+            (-1,) + (1,) * (v.ndim - 1))
+        ident = 1.0 if m.group(1) == "w" else 0.0
+        return v * keep + ident * (1.0 - keep)
+
+    return tu.map_with_path(one, params)
+
+
+def ablate_layers(params, cfg: ModelCfg, layer_ids) -> dict:
+    """Identity-ablate the given layers' adapters (inverse mask helper)."""
+    mask = np.ones((n_layers(cfg),), bool)
+    mask[np.asarray(layer_ids, int)] = False
+    return apply_layer_mask(params, cfg, mask)
+
+
+def ablation_importance(params, cfg: ModelCfg,
+                        eval_fn: Callable[[dict], float]) -> np.ndarray:
+    """(L,) delta-quality score: base quality minus quality with layer l's
+    adapter ablated to identity. `eval_fn(params) -> float` (higher is
+    better) is typically `lambda p: evaluate(cfg, p, data.eval_batches(bs),
+    metric)` - the existing eval loop, not a private one."""
+    base = float(eval_fn(params))
+    return np.asarray([
+        base - float(eval_fn(ablate_layers(params, cfg, [l])))
+        for l in range(n_layers(cfg))
+    ])
+
+
+# ---------------------------------------------------------------------------
+# Gradient gating (mask -> grad-gate pytree)
+# ---------------------------------------------------------------------------
+
+
+def mask_gate(params, cfg: ModelCfg, mask: Optional[np.ndarray]):
+    """Gradient gate for an arbitrary layer mask: 1.0 everywhere except
+    stacked adapter/ffn_norm leaves of masked-OFF layers, which get 0.0
+    (shaped (repeats, 1...) to broadcast over the stacked leaf). mask=None
+    gates nothing. This generalizes the old contiguous top-k gate: any
+    importance-derived mask trains pruned-from-the-start."""
+    if mask is None:
+        return jax.tree.map(lambda v: 1.0, params)
+    mask = np.asarray(mask, bool)
+    if mask.shape != (n_layers(cfg),):
+        raise ValueError(f"mask shape {mask.shape} != ({n_layers(cfg)},)")
+
+    def gate(path: str, v):
+        ids = leaf_layer_ids(cfg, path)
+        if ids is None or not _GATED_RE.search(path):
+            return 1.0
+        gates = mask[ids].astype(np.float32)
+        shape = (len(ids),) + (1,) * (getattr(v, "ndim", 1) - 1)
+        return jax.numpy.asarray(gates).reshape(shape)
+
+    return tu.map_with_path(gate, params)
+
+
+def gated_param_count(params, trainable_mask, gate_tree) -> int:
+    """Trainable params surviving the gate (Table-5 / preset fractions)."""
+    count = 0
+    for leaf, m, g in zip(jax.tree.leaves(params),
+                          jax.tree.leaves(trainable_mask),
+                          jax.tree.leaves(gate_tree)):
+        if not m or leaf is None:
+            continue
+        if isinstance(g, (float, int)):
+            count += int(np.prod(leaf.shape)) * int(g != 0.0)
+        else:
+            per_layer = int(np.prod(leaf.shape[1:]))
+            count += int(np.asarray(g).sum()) * per_layer
+    return count

@@ -1,0 +1,244 @@
+"""Packed sparse adapters and the quality-budgeted layer-mask search.
+
+The packed representation is per-leaf: a stacked adapter leaf
+(repeats, d) with `keep` (repeats,) becomes a `PackedRows` - the boolean
+bitmask plus ONLY the kept rows, with the identity fill value (1.0 for w,
+0.0 for b) recorded so `unpack_leaf(pack_leaf(x)) == apply_layer_mask(x)`
+exactly. A sparse DELTA is an ordinary task-delta tree whose /adapter/
+leaves are PackedRows; the checkpoint store serializes it natively
+(__spmask__/__sprows__/__spfill__ sibling arrays, see checkpoint/store),
+the registry publishes it unchanged, and `AdapterBank` unpacks at insert
+so the device bank keeps its fixed dense shape (zero-retrace contract).
+
+Rows are always fp32: the paper's adapters are the one part of a
+deployment quantization never touches (repro.quant's allowlist excludes
+/adapter/), and `pack_leaf` enforces it so an int8-engine pipeline cannot
+silently quantize a tenant's rows.
+
+The paper's 0.022% variant (keep the top 2/3 of layers, Table 5's
+saturation point) ships as the "paper-0.022" preset.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Tuple
+
+import re
+
+import jax
+import numpy as np
+
+from repro.common import tree as tu
+from repro.common.types import ModelCfg
+from repro.core import peft
+from repro.sparse import importance as imp
+
+_ADAPTER_LEAF = r"/adapter/(w|b)$"
+
+
+class PackedRows:
+    """Bitmask + kept rows of one stacked adapter leaf. Deliberately NOT a
+    registered pytree node: it is a host-side storage artifact that must
+    travel through tree maps (mask/partition/flatten) as one opaque leaf
+    with its path intact, never be traced into a jit."""
+
+    __slots__ = ("mask", "rows", "fill")
+
+    def __init__(self, mask, rows, fill: float):
+        mask = np.asarray(mask, bool)
+        rows = np.asarray(rows)
+        if mask.ndim != 1:
+            raise ValueError(f"mask must be 1-D, got {mask.shape}")
+        if rows.shape[:1] != (int(mask.sum()),):
+            raise ValueError(
+                f"rows {rows.shape} does not hold {int(mask.sum())} kept rows")
+        if not np.issubdtype(rows.dtype, np.floating) \
+                or rows.dtype.itemsize < 4:
+            raise ValueError(
+                f"sparse adapter rows must stay fp32, got {rows.dtype} "
+                "(quantized/int rows would corrupt the serving bank)")
+        self.mask = mask
+        self.rows = rows.astype(np.float32)
+        self.fill = float(fill)
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        """Dense shape this leaf unpacks to."""
+        return (self.mask.shape[0],) + self.rows.shape[1:]
+
+    @property
+    def nbytes(self) -> int:
+        return self.rows.nbytes + self.mask.nbytes
+
+    def __repr__(self):
+        return (f"PackedRows(kept={int(self.mask.sum())}/"
+                f"{self.mask.shape[0]}, d={self.rows.shape[1:]}, "
+                f"fill={self.fill})")
+
+
+def is_packed(v) -> bool:
+    return isinstance(v, PackedRows)
+
+
+def pack_leaf(leaf, keep: np.ndarray, fill: float) -> PackedRows:
+    """(repeats, ...) dense leaf + (repeats,) keep mask -> PackedRows.
+    Lossy by definition at dropped rows; exact round trip when they
+    already hold the identity (`apply_layer_mask` output, or adapters
+    trained with the matching grad gate)."""
+    leaf = np.asarray(leaf)
+    keep = np.asarray(keep, bool)
+    if keep.shape != leaf.shape[:1]:
+        raise ValueError(f"keep {keep.shape} != leading dim of {leaf.shape}")
+    return PackedRows(keep, leaf[keep], fill)
+
+
+def unpack_leaf(pr: PackedRows, dtype=np.float32) -> np.ndarray:
+    """Inverse of pack_leaf: identity fill at dropped rows."""
+    out = np.full(pr.shape, pr.fill, dtype)
+    out[pr.mask] = pr.rows
+    return out
+
+
+def _leaf_fill(path: str) -> float:
+    return 1.0 if path.endswith("/w") else 0.0
+
+
+def pack_delta(delta, cfg: ModelCfg, mask: np.ndarray):
+    """Task delta -> sparse delta: /adapter/ leaves become PackedRows
+    keeping only the layers `mask` marks active. Non-adapter delta leaves
+    (tuned norms, heads) stay dense."""
+    mask = np.asarray(mask, bool)
+
+    def one(path: str, v):
+        if v is None or is_packed(v) \
+                or not re.search(_ADAPTER_LEAF, path):
+            return v
+        ids = imp.leaf_layer_ids(cfg, path)
+        if ids is None:
+            return v
+        return pack_leaf(v, mask[ids], _leaf_fill(path))
+
+    return tu.map_with_path(one, delta)
+
+
+def unpack_delta(delta):
+    """Sparse delta -> dense delta (identity rows at pruned layers).
+    Dense inputs pass through unchanged, so callers (the bank's insert
+    path) need not know which kind they were handed."""
+    return jax.tree.map(
+        lambda v: unpack_leaf(v) if is_packed(v) else v, delta,
+        is_leaf=lambda v: v is None or is_packed(v))
+
+
+def prune_delta(delta, cfg: ModelCfg, mask: np.ndarray):
+    """apply_layer_mask + pack in one step: the exact-round-trip form
+    (dropped rows are forced to identity before packing, so
+    unpack(prune_delta(x)) == apply_layer_mask(x)). Accepts already-
+    packed deltas (a registry-loaded tenant being re-pruned): they are
+    unpacked first, so the new mask wins."""
+    delta = unpack_delta(delta)
+    return pack_delta(imp.apply_layer_mask(delta, cfg, mask), cfg, mask)
+
+
+def delta_mask(delta, cfg: ModelCfg) -> np.ndarray:
+    """(L,) active-layer mask of a (possibly sparse) delta: a layer is
+    active if ANY of its adapter leaves keeps a row there; fully dense
+    deltas are all-active. This is the mask the bank pins per row."""
+    L = imp.n_layers(cfg)
+    mask = np.zeros((L,), bool)
+    for path, v in tu.flatten_with_paths(delta):
+        if v is None or not re.search(_ADAPTER_LEAF, path):
+            continue
+        ids = imp.leaf_layer_ids(cfg, path)
+        if ids is None:
+            continue
+        mask[ids] |= v.mask if is_packed(v) else True
+    return mask
+
+
+def packed_bytes(delta) -> int:
+    """Host bytes of a (possibly sparse) delta's adapter leaves - the
+    per-tenant storage/bank-row cost the bench compares dense vs packed."""
+    total = 0
+    for path, v in tu.flatten_with_paths(delta):
+        if v is None or not re.search(_ADAPTER_LEAF, path):
+            continue
+        total += v.nbytes if is_packed(v) else tu.tree_bytes(v)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Presets + the quality-budgeted mask search
+# ---------------------------------------------------------------------------
+
+# paper Table 5: quality saturates past ~2/3 of depth; keeping the top
+# 2/3 of layers is the published 0.022% variant (8/12 on BERT-base)
+PRESETS: Dict[str, Callable[[ModelCfg], np.ndarray]] = {
+    "paper-0.022": lambda cfg: imp.depth_mask(
+        cfg, max(1, (2 * imp.n_layers(cfg)) // 3)),
+}
+
+
+def preset_mask(cfg: ModelCfg, name: str = "paper-0.022") -> np.ndarray:
+    try:
+        return PRESETS[name](cfg)
+    except KeyError:
+        raise KeyError(f"unknown prune preset {name!r} "
+                       f"(known: {sorted(PRESETS)})") from None
+
+
+def search_mask(scores: np.ndarray,
+                eval_fn: Callable[[np.ndarray], float],
+                *, budget: float, min_layers: int = 1,
+                ) -> Tuple[np.ndarray, List[dict]]:
+    """Greedy quality-budgeted pruning: drop layers in ascending
+    importance order while `eval_fn(mask)` stays within `budget` of the
+    all-layers quality. Returns (mask, history); history records every
+    probe so benches can plot the quality/params frontier.
+
+    eval_fn receives a candidate (L,) mask and returns quality (higher is
+    better) - typically a gated fine-tune + evaluate, or just
+    `evaluate(cfg, apply_layer_mask(params, cfg, m), ...)` for
+    post-training pruning.
+    """
+    scores = np.asarray(scores, np.float64)
+    L = scores.shape[0]
+    if not 1 <= min_layers <= L:
+        raise ValueError(f"min_layers must be in [1, {L}]")
+    mask = np.ones((L,), bool)
+    base = float(eval_fn(mask))
+    history = [{"mask": mask.copy(), "quality": base, "kept": L,
+                "accepted": True}]
+    # ties broken toward dropping SHALLOW layers first (paper Fig 4)
+    for l in np.argsort(scores + np.arange(L) * 1e-12):
+        if mask.sum() <= min_layers:
+            break
+        cand = mask.copy()
+        cand[l] = False
+        q = float(eval_fn(cand))
+        ok = q >= base - budget
+        history.append({"mask": cand.copy(), "quality": q,
+                        "kept": int(cand.sum()), "accepted": ok})
+        if ok:
+            mask = cand
+    return mask, history
+
+
+def sparse_param_stats(params, cfg: ModelCfg, mask: np.ndarray,
+                       strategy_name: str = "hadamard") -> Dict[str, float]:
+    """Trainable-parameter accounting under a layer mask: the pruned
+    count/percent next to the dense ones, so the paper's 0.033% -> 0.022%
+    line is one call."""
+    strat = peft.strategy(strategy_name)
+    tmask = peft.trainable_mask(params, strat)
+    dense = peft.param_stats(params, tmask)
+    gate = imp.mask_gate(params, cfg, mask)
+    n = imp.gated_param_count(params, tmask, gate)
+    return {
+        "total": dense["total"],
+        "dense_trainable": dense["trainable"],
+        "dense_percent": dense["percent"],
+        "pruned_trainable": n,
+        "pruned_percent": 100.0 * n / max(dense["total"], 1),
+        "kept_layers": int(np.asarray(mask, bool).sum()),
+        "n_layers": imp.n_layers(cfg),
+    }

@@ -1,0 +1,216 @@
+"""Shared-`w` / per-task-`b` factorization of the adapter bank.
+
+Paper Fig 5 (c1/c2): the learned `w` vectors are nearly identical across
+tasks (cross-task cosine ~1.0) while `b` is task-specific (<=~0.3).
+`core/patterns.suggest_shared_weight` computes the factorization; this
+module makes it a serving artifact:
+
+  * `factorize(task_deltas, cfg)` - one shared `w` tree (per-leaf average
+    across tasks, exactly `suggest_shared_weight`'s proposal in tree
+    form) plus per-task `b` trees, optionally packed under a layer mask.
+  * `SharedAdapter` round-trips through the checkpoint store
+    (`save_shared`/`load_shared`) - the artifact
+    examples/patterns_analysis.py emits.
+  * `shared_w_overlay(base, shared)` - base params with the shared `w`
+    burned in: hand it to `AdapterBank(..., shared_w=True)` and the bank
+    stores ONE `w` row-set ((repeats, 1, d) leaves) while per-tenant
+    inserts scatter only `b` rows. T tenants cost (T+1) row-sets instead
+    of 2T - and with the paper's prune preset on top, (T+1)*2/3.
+
+`from_vectors` is the bridge from `suggest_shared_weight`'s (L, d)
+layer-ordered arrays back into param-tree leaves (the inverse of
+`core.hadamard.adapter_vectors`' gather).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.common import tree as tu
+from repro.common.types import ModelCfg
+from repro.sparse import importance as imp
+from repro.sparse import prune
+
+_W_RE = re.compile(r"/adapter/w$")
+_B_RE = re.compile(r"/adapter/b$")
+
+
+@dataclass
+class SharedAdapter:
+    """w: delta-shaped tree holding only /adapter/w leaves (dense or
+    PackedRows); b: task name -> tree holding only /adapter/b leaves;
+    mask: the (L,) layer mask both were packed under (None = dense)."""
+
+    w: dict
+    b: Dict[str, dict] = field(default_factory=dict)
+    mask: Optional[np.ndarray] = None
+
+    @property
+    def tasks(self):
+        return sorted(self.b)
+
+    def bytes_w(self) -> int:
+        return prune.packed_bytes(self.w)
+
+    def bytes_b(self, task: str) -> int:
+        return prune.packed_bytes(self.b[task])
+
+
+def _keep(tree, regex: re.Pattern):
+    """Subtree with only the leaves whose path matches; rest -> None."""
+    sel, _ = tu.partition(tree, tu.mask_from_patterns(tree, (regex.pattern,)))
+    return sel
+
+
+def factorize(task_deltas: Dict[str, dict], cfg: ModelCfg,
+              mask: Optional[np.ndarray] = None) -> SharedAdapter:
+    """Average `w` across tasks per leaf (valid when the cross-task cosine
+    of w is ~1, which `core/patterns.consistency_report` verifies), keep
+    per-task `b`. With a layer mask, both sides are packed."""
+    if not task_deltas:
+        raise ValueError("need at least one task delta")
+    names = sorted(task_deltas)
+    # registry-loaded tenants may arrive packed: factorize in dense space
+    task_deltas = {t: prune.unpack_delta(d) for t, d in task_deltas.items()}
+    first = task_deltas[names[0]]
+    w_trees = [_keep(task_deltas[t], _W_RE) for t in names]
+    flat = [dict(tu.flatten_with_paths(t)) for t in w_trees]
+    mean_w = {
+        p: np.mean([np.asarray(f[p], np.float32) for f in flat], axis=0)
+        for p in flat[0] if flat[0][p] is not None
+    }
+    shared_w = tu.map_with_path(
+        lambda p, v: mean_w.get(p, v), _keep(first, _W_RE))
+    b = {t: _keep(task_deltas[t], _B_RE) for t in names}
+    if mask is not None:
+        shared_w = prune.prune_delta(shared_w, cfg, mask)
+        b = {t: prune.prune_delta(v, cfg, mask) for t, v in b.items()}
+    return SharedAdapter(w=shared_w, b=b,
+                         mask=None if mask is None
+                         else np.asarray(mask, bool))
+
+
+def from_vectors(shared_w: np.ndarray, per_task_b: Dict[str, np.ndarray],
+                 template, cfg: ModelCfg,
+                 mask: Optional[np.ndarray] = None) -> SharedAdapter:
+    """Build a SharedAdapter from `core/patterns.suggest_shared_weight`'s
+    output: shared_w (L, d) and per-task b (L, d) in global layer order,
+    scattered back into the adapter leaves of `template` (any tree with
+    the model's /adapter/ leaves, e.g. one task's params or delta)."""
+
+    def scatter(arr):
+        def one(path: str, v):
+            ids = imp.leaf_layer_ids(cfg, path)
+            if ids is None or v is None:
+                return v
+            return np.asarray(arr[ids], np.float32)
+        return one
+
+    w_tree = tu.map_with_path(scatter(shared_w), _keep(template, _W_RE))
+    b = {t: tu.map_with_path(scatter(vec), _keep(template, _B_RE))
+         for t, vec in per_task_b.items()}
+    sa = SharedAdapter(w=w_tree, b=b, mask=None)
+    if mask is not None:
+        sa.w = prune.prune_delta(sa.w, cfg, mask)
+        sa.b = {t: prune.prune_delta(v, cfg, mask) for t, v in sa.b.items()}
+        sa.mask = np.asarray(mask, bool)
+    return sa
+
+
+def _nest(flat: Dict[str, np.ndarray]) -> dict:
+    root: dict = {}
+    for path, v in flat.items():
+        node = root
+        parts = path.split("/")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = v
+    return root
+
+
+def task_row(shared: SharedAdapter, task: str) -> dict:
+    """One tenant's dense bank-row tree (shared w + its own b), the shape
+    `insert_bank_row`/`validate_adapter_row` expect. Merged by PATH, not
+    tree structure: a store round trip drops None placeholders, so the w
+    and b subtrees need not be structurally congruent. Shared-w banks
+    skip the w leaves at insert; dense banks write both."""
+    flat = {p: v for tree in (prune.unpack_delta(shared.w),
+                              prune.unpack_delta(shared.b[task]))
+            for p, v in tu.flatten_with_paths(tree) if v is not None}
+    return _nest(flat)
+
+
+def shared_w_overlay(base_params, shared: SharedAdapter):
+    """Base params with the shared `w` overlaid onto every adapter w leaf
+    (b untouched): the tree a shared-w `AdapterBank` is built from."""
+    w_leaves = {p: v for p, v in
+                tu.flatten_with_paths(prune.unpack_delta(shared.w))
+                if v is not None}
+
+    def one(path: str, v):
+        w = w_leaves.get(path)
+        return v if w is None else np.asarray(w, np.float32)
+
+    return tu.map_with_path(one, base_params)
+
+
+# ---------------------------------------------------------------------------
+# Persistence (the artifact patterns_analysis.py emits)
+# ---------------------------------------------------------------------------
+
+
+def save_shared(path: str, shared: SharedAdapter) -> None:
+    from repro.checkpoint.store import save_tree  # deferred: light import
+
+    save_tree(path, {"w": shared.w, "b": shared.b},
+              metadata={
+                  "kind": "shared_adapter",
+                  "tasks": shared.tasks,
+                  "mask": None if shared.mask is None
+                  else [bool(x) for x in shared.mask],
+              })
+
+
+def load_shared(path: str) -> SharedAdapter:
+    from repro.checkpoint.store import load_tree
+
+    tree, meta = load_tree(path)
+    if meta.get("kind") != "shared_adapter":
+        raise ValueError(f"{path} is not a shared-adapter artifact")
+    mask = meta.get("mask")
+    return SharedAdapter(
+        w=tree["w"], b=tree.get("b", {}),
+        mask=None if mask is None else np.asarray(mask, bool))
+
+
+# ---------------------------------------------------------------------------
+# Accounting
+# ---------------------------------------------------------------------------
+
+
+def bank_bytes_report(cfg: ModelCfg, template, n_tasks: int,
+                      mask: Optional[np.ndarray] = None) -> Dict[str, float]:
+    """Adapter-bank byte accounting for T tenants: dense (T full (w, b)
+    row-sets) vs shared-w (one w row-set + T b row-sets), with optional
+    packing. `template` is any tree carrying the model's adapter leaves.
+    `marginal_*` is the cost of tenant T+1 - the number that decides how
+    many tenants fit a device."""
+    w_b = prune.packed_bytes(_keep(template, _W_RE))
+    b_b = prune.packed_bytes(_keep(template, _B_RE))
+    if mask is not None:
+        frac = float(np.asarray(mask, bool).mean())
+        w_b, b_b = w_b * frac, b_b * frac
+    dense_total = n_tasks * (w_b + b_b)
+    shared_total = w_b + n_tasks * b_b
+    return {
+        "tenants": n_tasks,
+        "dense_total": dense_total,
+        "shared_total": shared_total,
+        "total_reduction": dense_total / max(shared_total, 1),
+        "marginal_dense": w_b + b_b,
+        "marginal_shared": b_b,
+        "marginal_reduction": (w_b + b_b) / max(b_b, 1),
+    }

@@ -70,8 +70,17 @@ def merged_params(state):
 
 
 def build_train_step(cfg: ModelCfg, ocfg: OptimCfg, *, microbatch: int = 0,
-                     gate=None, loss_fn: Optional[Callable] = None):
-    """Returns step(state, batch) -> (state, metrics)."""
+                     gate=None, layer_mask=None,
+                     loss_fn: Optional[Callable] = None):
+    """Returns step(state, batch) -> (state, metrics).
+
+    layer_mask: a host-side (n_layers,) bool mask (repro.sparse) - the
+    gradient gate is derived from it at trace time via
+    `sparse.importance.mask_gate`, so pruned-from-the-start training
+    (the paper's 0.022% variant, or any importance-derived mask) needs no
+    param tree up front. Mutually exclusive with an explicit `gate`."""
+    if gate is not None and layer_mask is not None:
+        raise ValueError("pass either gate or layer_mask, not both")
     lf = loss_fn or loss_for(cfg)
 
     def loss_wrt_trainable(trainable, frozen, batch):
@@ -106,9 +115,16 @@ def build_train_step(cfg: ModelCfg, ocfg: OptimCfg, *, microbatch: int = 0,
         (loss, metrics), grads = compute_grads(
             state["trainable"], state["frozen"], batch)
 
-        if gate is not None:  # paper Table 5: per-layer unfreeze gating
+        g_tree = gate
+        if layer_mask is not None:
+            # derived from the grads' own structure at trace time: the
+            # gate is a constant pytree, folded by jit
+            from repro.sparse.importance import mask_gate
+
+            g_tree = mask_gate(grads, cfg, layer_mask)
+        if g_tree is not None:  # Table 5 / repro.sparse: per-layer gating
             grads = jax.tree.map(
-                lambda g, m: None if g is None else g * m, grads, gate,
+                lambda g, m: None if g is None else g * m, grads, g_tree,
                 is_leaf=lambda v: v is None)
 
         new_err = None

@@ -163,6 +163,54 @@ def test_scheduler_fuzz_int8_vs_fp32_oracle(seed):
                                       err_msg=f"seed {seed} req {i}")
 
 
+def test_quant_times_sparse_packed_rows_stay_fp32():
+    """quant x sparse composition: packed sparse adapters served through
+    an int8 engine decode token-exactly (pruned layers as identity), and
+    the bank's unpacked rows stay fp32 - quantization never touches
+    adapter leaves, and PackedRows itself refuses non-fp32 rows."""
+    from repro.serving.registry import AdapterBank, AdapterRegistry
+    from repro.sparse import (apply_layer_mask, depth_mask, is_packed,
+                              prune_delta)
+    from repro.sparse.prune import PackedRows
+
+    cfg = tiny_cfg()
+    base = _snap_to_grid(M.init_params(KEY, cfg))
+    mask = depth_mask(cfg, 1)
+    variants = [
+        apply_layer_mask(
+            perturb_adapters(base, jax.random.fold_in(KEY, 90 + t),
+                             scale=0.2), cfg, mask)
+        for t in range(2)
+    ]
+    td = tempfile.mkdtemp()
+    registry = AdapterRegistry(td)
+    for t, v in enumerate(variants):
+        registry.publish(f"task{t}", prune_delta(extract_delta(v), cfg, mask))
+
+    oracle = MultiTaskEngine(cfg, variants)  # fp32, dense
+    hot = MultiTaskEngine(cfg, AdapterBank(cfg, base, 2, registry),
+                          quant="int8")
+    toks = np.asarray(jax.random.randint(KEY, (2, 8), 0, 97))
+    want = oracle.generate_for_tasks(toks, np.array([0, 1]), 6)
+    got = hot.generate_for_adapters(toks, ["task0", "task1"], 6)
+    np.testing.assert_array_equal(got, want)
+
+    # every live bank adapter leaf is a plain fp32 array - no QTensor, no
+    # int8 payload anywhere near a tenant's rows
+    for path, leaf in tu.flatten_with_paths(hot.bank):
+        if "/adapter/" not in path:
+            continue
+        assert not is_qtensor(leaf), path
+        assert np.asarray(leaf).dtype == np.float32, path
+    # and the packed form itself rejects quantized rows at construction
+    with pytest.raises(ValueError, match="fp32"):
+        PackedRows(np.array([True]), np.zeros((1, 4), np.int8), 0.0)
+    # registry still holds the packed (fp32-rows) form on disk
+    delta, _ = registry.load("task0")
+    packed = [v for p, v in tu.flatten_with_paths(delta) if is_packed(v)]
+    assert packed and all(v.rows.dtype == np.float32 for v in packed)
+
+
 def test_quant_adds_no_retraces_across_swaps():
     """Hot-swapping adapters on a quantized engine must not retrace the
     decode tick: the QTensor leaves are jit constants-by-argument exactly

@@ -1,0 +1,681 @@
+"""repro.sparse: importance scoring, packed pruning, shared-w
+factorization, the masked multitask kernel, and sparse serving.
+
+The serving acceptance contract mirrors test_registry.py's: generation
+through banks holding packed / shared / mixed tenants is token-identical
+to a statically built dense bank, and the jitted decode tick compiles
+exactly once across any number of sparse hot-swaps.
+"""
+import tempfile
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from conftest import tiny_cfg
+from repro.common import tree as tu
+from repro.core import peft
+from repro.core.hadamard import extract_delta, perturb_adapters
+from repro.kernels import ops, ref
+from repro.models import model as M
+from repro.sparse import importance as imp
+from repro.sparse import prune, shared
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _cfg():
+    return peft.attach(tiny_cfg(), peft.strategy("hadamard"))
+
+
+# ---------------------------------------------------------------------------
+# importance
+# ---------------------------------------------------------------------------
+
+
+def test_magnitude_importance_orders_layers():
+    """A layer whose adapter deviates more from identity scores higher."""
+    cfg = _cfg()
+    p = M.init_params(KEY, cfg)
+    mask = np.array([False, True])  # bump only layer 1
+    bumped = imp.apply_layer_mask(
+        perturb_adapters(p, KEY, scale=0.5), cfg, mask)
+    scores = imp.magnitude_importance(bumped, cfg)
+    assert scores.shape == (2,)
+    assert scores[1] > scores[0] >= 0.0
+    assert imp.topk_mask(scores, 1).tolist() == [False, True]
+
+
+def test_cross_task_importance_averages():
+    cfg = _cfg()
+    p = M.init_params(KEY, cfg)
+    tasks = {f"t{i}": perturb_adapters(p, jax.random.fold_in(KEY, i),
+                                       scale=0.3) for i in range(3)}
+    want = np.mean([imp.magnitude_importance(v, cfg)
+                    for v in tasks.values()], axis=0)
+    np.testing.assert_allclose(imp.cross_task_importance(tasks, cfg), want)
+
+
+def test_ablation_importance_charges_the_right_layer():
+    """With quality = total deviation-from-identity, ablating layer l must
+    cost exactly layer l's own deviation (the eval loop is exercised for
+    real by sparse_bench; here the plumbing is checked exactly)."""
+    cfg = _cfg()
+    p = perturb_adapters(M.init_params(KEY, cfg), KEY, scale=0.4)
+
+    def quality(params):
+        return float(imp.magnitude_importance(params, cfg).sum())
+
+    scores = imp.ablation_importance(p, cfg, quality)
+    np.testing.assert_allclose(scores, imp.magnitude_importance(p, cfg),
+                               rtol=1e-6)
+
+
+def test_apply_layer_mask_identity_at_pruned_layers():
+    cfg = _cfg()
+    p = perturb_adapters(M.init_params(KEY, cfg), KEY, scale=0.3)
+    mask = np.array([False, True])
+    q = imp.apply_layer_mask(p, cfg, mask)
+    w = np.asarray(dict(tu.flatten_with_paths(q))["blocks/g0/slot0/adapter/w"])
+    b = np.asarray(dict(tu.flatten_with_paths(q))["blocks/g0/slot0/adapter/b"])
+    np.testing.assert_array_equal(w[0], np.ones_like(w[0]))
+    np.testing.assert_array_equal(b[0], np.zeros_like(b[0]))
+    orig = np.asarray(
+        dict(tu.flatten_with_paths(p))["blocks/g0/slot0/adapter/w"])
+    np.testing.assert_array_equal(w[1], orig[1])
+
+
+def test_mask_gate_matches_peft_layer_gate_and_counts():
+    """Contiguous depth masks reproduce the old top-k gate bit for bit
+    (core.peft delegates here - the Table-5 bench cannot drift)."""
+    cfg = _cfg()
+    p = M.init_params(KEY, cfg)
+    via_peft = peft.layer_gate(p, cfg, top_layers=1)
+    via_mask = imp.mask_gate(p, cfg, imp.depth_mask(cfg, 1))
+    for (pa, a), (pb, b) in zip(tu.flatten_with_paths(via_peft),
+                                tu.flatten_with_paths(via_mask)):
+        assert pa == pb
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=pa)
+    tmask = peft.trainable_mask(p, peft.strategy("hadamard"))
+    assert peft.gated_param_count(p, tmask, via_peft) == \
+        imp.gated_param_count(p, tmask, via_mask)
+
+
+def test_mask_gate_non_contiguous():
+    """Importance-derived masks need not be depth-contiguous."""
+    cfg = _cfg()
+    p = M.init_params(KEY, cfg)
+    gate = imp.mask_gate(p, cfg, np.array([True, False]))
+    g = dict(tu.flatten_with_paths(gate))
+    assert np.asarray(g["blocks/g0/slot0/adapter/w"]).ravel().tolist() == \
+        [1.0, 0.0]
+    assert np.asarray(g["blocks/g0/slot0/ffn_norm/scale"]).ravel().tolist() \
+        == [1.0, 0.0]
+
+
+# ---------------------------------------------------------------------------
+# packing (property tests)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(repeats=st.integers(1, 6), d=st.integers(1, 16),
+       seed=st.integers(0, 2**31 - 1), fill=st.sampled_from([0.0, 1.0]))
+def test_pack_unpack_leaf_round_trip(repeats, d, seed, fill):
+    rs = np.random.RandomState(seed)
+    leaf = rs.randn(repeats, d).astype(np.float32)
+    keep = rs.rand(repeats) < 0.5
+    pr = prune.pack_leaf(leaf, keep, fill)
+    dense = prune.unpack_leaf(pr)
+    # kept rows exact, dropped rows exactly the fill
+    np.testing.assert_array_equal(dense[keep], leaf[keep])
+    assert (dense[~keep] == fill).all()
+    # pack(unpack(p)) == p: the sparse form is a fixed point
+    back = prune.pack_leaf(dense, keep, fill)
+    np.testing.assert_array_equal(back.rows, pr.rows)
+    np.testing.assert_array_equal(back.mask, pr.mask)
+    assert pr.nbytes <= leaf.nbytes + repeats
+
+
+def test_packed_rows_reject_non_fp32():
+    with pytest.raises(ValueError, match="fp32"):
+        prune.PackedRows(np.array([True]), np.zeros((1, 4), np.int8), 0.0)
+    with pytest.raises(ValueError, match="fp32"):
+        prune.PackedRows(np.array([True]), np.zeros((1, 4), np.float16), 0.0)
+
+
+def test_prune_delta_round_trip_and_mask():
+    cfg = _cfg()
+    p = perturb_adapters(M.init_params(KEY, cfg), KEY, scale=0.3)
+    delta = extract_delta(p)
+    mask = np.array([False, True])
+    sp = prune.prune_delta(delta, cfg, mask)
+    # the packed form reports its own mask
+    np.testing.assert_array_equal(prune.delta_mask(sp, cfg), mask)
+    np.testing.assert_array_equal(
+        prune.delta_mask(delta, cfg), np.array([True, True]))
+    # unpack == apply_layer_mask on every leaf (exact round trip)
+    dense = prune.unpack_delta(sp)
+    want = imp.apply_layer_mask(delta, cfg, mask)
+    for (pa, a), (_, b) in zip(tu.flatten_with_paths(dense),
+                               tu.flatten_with_paths(want)):
+        if a is None:
+            continue
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=pa)
+    # adapter bytes really shrink (non-adapter delta leaves stay dense)
+    assert prune.packed_bytes(sp) < prune.packed_bytes(delta)
+
+
+def test_packed_delta_store_round_trip():
+    """PackedRows serialize natively: the on-disk form stores only active
+    rows and restores as the same packed object."""
+    import os
+
+    from repro.checkpoint.store import load_tree, save_tree
+
+    cfg = _cfg()
+    delta = extract_delta(perturb_adapters(M.init_params(KEY, cfg), KEY,
+                                           scale=0.3))
+    sp = prune.prune_delta(delta, cfg, np.array([False, True]))
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "sp.ckpt")
+        save_tree(path, sp, metadata={"k": 1})
+        back, meta = load_tree(path)
+    assert meta["k"] == 1
+    flat_a = dict(tu.flatten_with_paths(sp))
+    flat_b = dict(tu.flatten_with_paths(back))
+    assert set(flat_a) == set(flat_b)
+    for path_, a in flat_a.items():
+        b = flat_b[path_]
+        if prune.is_packed(a):
+            assert prune.is_packed(b), path_
+            np.testing.assert_array_equal(a.mask, b.mask, err_msg=path_)
+            np.testing.assert_array_equal(a.rows, b.rows, err_msg=path_)
+            assert a.fill == b.fill
+        elif a is not None:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=path_)
+
+
+def test_search_mask_respects_budget():
+    """Greedy search drops only layers whose ablation stays within the
+    quality budget; the per-layer cost function makes the outcome exact."""
+    cost = np.array([0.001, 0.05, 0.002, 0.3])  # quality carried per layer
+
+    def quality(mask):
+        return 1.0 - float(cost[~np.asarray(mask, bool)].sum())
+
+    mask, hist = prune.search_mask(cost, quality, budget=0.01)
+    # only the two cheap layers fit a 0.01 budget together? 0.001+0.002
+    # = 0.003 <= 0.01; adding 0.05 would blow it
+    assert mask.tolist() == [False, True, False, True]
+    assert hist[0]["quality"] == 1.0
+    assert any(not h["accepted"] for h in hist)
+    # min_layers floor is respected even with an infinite budget
+    m2, _ = prune.search_mask(cost, quality, budget=10.0, min_layers=1)
+    assert m2.sum() == 1
+
+
+def test_preset_and_sparse_param_stats():
+    """The paper preset keeps 2/3 of depth: 8/12 on BERT-base, i.e. the
+    0.033% -> 0.022% line; counted through the shared gating rule."""
+    from repro.configs import PAPER
+
+    cfg = peft.attach(PAPER["bert-base"](), peft.strategy("hadamard"))
+
+    def shapes(c):
+        return jax.eval_shape(lambda: M.init_params(KEY, c))
+
+    p = shapes(cfg)
+    mask = prune.preset_mask(cfg)
+    assert mask.sum() == 8 and mask.shape == (12,)
+    stats = prune.sparse_param_stats(p, cfg, mask)
+    assert stats["dense_trainable"] == 12 * 2 * 768 * 2
+    assert stats["pruned_trainable"] == 8 * 2 * 768 * 2
+    assert stats["pruned_percent"] < 0.025 < 0.03 < stats["dense_percent"]
+    with pytest.raises(KeyError):
+        prune.preset_mask(cfg, "nope")
+
+
+# ---------------------------------------------------------------------------
+# shared-w factorization
+# ---------------------------------------------------------------------------
+
+
+def _shared_world(n_tasks=3, scale=0.2):
+    cfg = _cfg()
+    base = M.init_params(KEY, cfg)
+    stem = perturb_adapters(base, jax.random.fold_in(KEY, 7),
+                            leaves=("w",), scale=scale)
+    variants = [perturb_adapters(stem, jax.random.fold_in(KEY, 100 + t),
+                                 leaves=("b",), scale=scale)
+                for t in range(n_tasks)]
+    return cfg, base, variants
+
+
+def test_factorize_matches_suggest_shared_weight():
+    """shared.factorize in tree space == patterns.suggest_shared_weight in
+    (L, d) space - one proposal, two addressings."""
+    from repro.core import patterns
+
+    cfg, base, variants = _shared_world()
+    task_params = {f"t{i}": v for i, v in enumerate(variants)}
+    sw, per_b = patterns.suggest_shared_weight(task_params, cfg)
+    sa = shared.factorize(
+        {k: extract_delta(v) for k, v in task_params.items()}, cfg)
+    # scatter the (L, d) vectors back into leaves and compare
+    via_vec = shared.from_vectors(sw, per_b, extract_delta(variants[0]), cfg)
+    for t in sa.tasks:
+        for (pa, a), (_, b) in zip(tu.flatten_with_paths(sa.b[t]),
+                                   tu.flatten_with_paths(via_vec.b[t])):
+            if a is None:
+                continue
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-6, err_msg=pa)
+    for (pa, a), (_, b) in zip(tu.flatten_with_paths(sa.w),
+                               tu.flatten_with_paths(via_vec.w)):
+        if a is None:
+            continue
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6,
+                                   err_msg=pa)
+
+
+def test_shared_adapter_save_load_round_trip():
+    import os
+
+    cfg, base, variants = _shared_world()
+    mask = np.array([False, True])
+    sa = shared.factorize(
+        {f"t{i}": extract_delta(v) for i, v in enumerate(variants)},
+        cfg, mask=mask)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "shared.ckpt")
+        shared.save_shared(path, sa)
+        back = shared.load_shared(path)
+        with pytest.raises(ValueError, match="shared-adapter"):
+            from repro.checkpoint.store import save_tree
+
+            other = os.path.join(d, "other.ckpt")
+            save_tree(other, {"x": np.zeros(2)})
+            shared.load_shared(other)
+    assert back.tasks == sa.tasks
+    np.testing.assert_array_equal(back.mask, mask)
+    row_a = shared.task_row(sa, "t1")
+    row_b = shared.task_row(back, "t1")
+    for (pa, a), (_, b) in zip(tu.flatten_with_paths(row_a),
+                               tu.flatten_with_paths(row_b)):
+        if a is None:
+            continue
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=pa)
+
+
+def test_bank_bytes_report():
+    cfg, base, variants = _shared_world()
+    template = extract_delta(variants[0])
+    rep = shared.bank_bytes_report(cfg, template, 8)
+    assert rep["marginal_reduction"] == pytest.approx(2.0)
+    assert rep["total_reduction"] == pytest.approx(16 / 9)
+    rep_p = shared.bank_bytes_report(cfg, template, 8,
+                                     mask=np.array([False, True]))
+    assert rep["dense_total"] / rep_p["shared_total"] > 2.0
+
+
+# ---------------------------------------------------------------------------
+# masked multitask kernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,S,d,T", [(3, 4, 8, 5), (2, 1, 16, 2)])
+def test_masked_kernel_matches_oracle(B, S, d, T):
+    ks = jax.random.split(KEY, 4)
+    x = jax.random.normal(ks[0], (B, S, d))
+    wb = 1.0 + 0.1 * jax.random.normal(ks[1], (T, d))
+    bb = 0.1 * jax.random.normal(ks[2], (T, d))
+    gate = (jax.random.uniform(ks[3], (T,)) < 0.5).astype(jnp.float32)
+    tids = jnp.asarray(np.arange(B) % T, jnp.int32)
+    got = ops.masked_multitask_hadamard(x, wb, bb, gate, tids,
+                                        impl="interpret")
+    want = ref.masked_multitask_hadamard_ref(x, wb, bb, gate, tids)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_masked_kernel_all_ones_equals_dense_multitask():
+    """Gate all-ones degrades EXACTLY to the dense multitask kernel: the
+    sparse serving path with no pruned tenant is the dense path."""
+    ks = jax.random.split(KEY, 3)
+    x = jax.random.normal(ks[0], (4, 3, 8), jnp.float32)
+    wb = jax.random.normal(ks[1], (3, 8))
+    bb = jax.random.normal(ks[2], (3, 8))
+    tids = jnp.asarray([0, 2, 1, 2], jnp.int32)
+    got = ops.masked_multitask_hadamard(x, wb, bb, jnp.ones((3,)), tids,
+                                        impl="interpret")
+    want = ops.multitask_hadamard(x, wb, bb, tids, impl="interpret")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+    # gated-off rows pass through as the identity inside the op
+    x_id = ops.masked_multitask_hadamard(x, wb, bb, jnp.zeros((3,)), tids,
+                                         impl="interpret")
+    np.testing.assert_allclose(np.asarray(x_id), np.asarray(x),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_masked_kernel_vjp_matches_jnp_autodiff():
+    ks = jax.random.split(KEY, 4)
+    B, S, d, T = 3, 4, 8, 4
+    x = jax.random.normal(ks[0], (B, S, d))
+    wb = 1.0 + 0.1 * jax.random.normal(ks[1], (T, d))
+    bb = 0.1 * jax.random.normal(ks[2], (T, d))
+    gate = jnp.asarray([1.0, 0.0, 1.0, 0.0])
+    tids = jnp.asarray([0, 1, 3], jnp.int32)
+
+    def f(xx, ww, bbb):
+        return jnp.sum(ops.masked_multitask_hadamard(
+            xx, ww, bbb, gate, tids, impl="interpret") ** 2)
+
+    def g(xx, ww, bbb):
+        return jnp.sum(ref.masked_multitask_hadamard_ref(
+            xx, ww, bbb, gate, tids) ** 2)
+
+    got = jax.grad(f, argnums=(0, 1, 2))(x, wb, bb)
+    want = jax.grad(g, argnums=(0, 1, 2))(x, wb, bb)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+    # gated-off rows receive exactly zero adapter gradient
+    assert np.allclose(np.asarray(got[1])[1], 0.0)
+    assert np.allclose(np.asarray(got[2])[3], 0.0)
+
+
+# ---------------------------------------------------------------------------
+# mask-gated training (pruned-from-the-start)
+# ---------------------------------------------------------------------------
+
+
+def test_train_step_layer_mask_freezes_pruned_layers():
+    from repro.common.types import OptimCfg
+    from repro.train.steps import build_train_step, make_state, merged_params
+
+    cfg = _cfg()
+    strat = peft.strategy("hadamard")
+    # weight_decay off: it nudges even zero-grad matrices, and this test
+    # asserts bit-exact identity at the pruned layer
+    ocfg = OptimCfg(lr=1e-2, total_steps=4, weight_decay=0.0)
+    mask = np.array([False, True])
+    state = make_state(KEY, cfg, strat, ocfg)
+    step = jax.jit(build_train_step(cfg, ocfg, layer_mask=mask))
+    toks = np.asarray(jax.random.randint(KEY, (4, 9), 0, cfg.vocab_size))
+    batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    for _ in range(3):
+        state, _ = step(state, batch)
+    params = merged_params(state)
+    flat = dict(tu.flatten_with_paths(params))
+    w = np.asarray(flat["blocks/g0/slot0/adapter/w"])
+    b = np.asarray(flat["blocks/g0/slot0/adapter/b"])
+    # pruned layer stayed exactly identity; kept layer trained
+    np.testing.assert_array_equal(w[0], np.ones_like(w[0]))
+    np.testing.assert_array_equal(b[0], np.zeros_like(b[0]))
+    assert not np.allclose(w[1], 1.0) or not np.allclose(b[1], 0.0)
+    with pytest.raises(ValueError, match="either gate or layer_mask"):
+        build_train_step(cfg, ocfg, gate={}, layer_mask=mask)
+
+
+# ---------------------------------------------------------------------------
+# sparse serving: packed rows, shared banks, mixed-tenant fuzz, retraces
+# ---------------------------------------------------------------------------
+
+
+_WORLD = {}
+
+
+def _serving_world():
+    """One backbone; 4 tenants: 2 dense, 1 packed-pruned, 1 shared-style
+    (b-only delta against the bank's shared w is exercised by the shared
+    engine below). Dense oracle built per tenant semantics."""
+    if not _WORLD:
+        from repro.serving.engine import MultiTaskEngine
+        from repro.serving.registry import AdapterBank, AdapterRegistry
+
+        cfg = _cfg()
+        base = M.init_params(KEY, cfg)
+        mask = imp.depth_mask(cfg, 1)
+        stem = perturb_adapters(base, jax.random.fold_in(KEY, 7),
+                                leaves=("w",), scale=0.2)
+        variants = [perturb_adapters(stem, jax.random.fold_in(KEY, 100 + t),
+                                     leaves=("b",), scale=0.2)
+                    for t in range(4)]
+        # tenants 2,3 are pruned: identity below the mask, published packed
+        served = [variants[0], variants[1],
+                  imp.apply_layer_mask(variants[2], cfg, mask),
+                  imp.apply_layer_mask(variants[3], cfg, mask)]
+
+        td = tempfile.mkdtemp()
+        registry = AdapterRegistry(td)
+        for t, v in enumerate(served):
+            delta = extract_delta(v)
+            if t >= 2:
+                delta = prune.prune_delta(delta, cfg, mask)
+            registry.publish(f"task{t}", delta)
+
+        sa = shared.factorize(
+            {f"task{t}": extract_delta(v) for t, v in enumerate(served)},
+            cfg)
+        sreg = AdapterRegistry(tempfile.mkdtemp())
+        for t in range(len(served)):
+            # shared tenants publish their factorized row (shared w +
+            # own b): the bank's deviation check rejects any other w
+            sreg.publish(f"task{t}", shared.task_row(sa, f"task{t}"))
+        # shared oracle: every tenant under the factorized (mean) w
+        from repro.train.loop import overlay_by_path
+
+        shared_served = [
+            overlay_by_path(v, shared.task_row(sa, f"task{t}"))
+            for t, v in enumerate(served)]
+
+        _WORLD.update(
+            cfg=cfg, mask=mask, registry=registry, base=base,
+            served=served,
+            oracle=MultiTaskEngine(cfg, served),
+            hot=MultiTaskEngine(cfg, AdapterBank(cfg, base, 2, registry)),
+            shared_oracle=MultiTaskEngine(cfg, shared_served),
+            shared_hot=MultiTaskEngine(
+                cfg, AdapterBank(cfg, shared.shared_w_overlay(base, sa), 2,
+                                 sreg, shared_w=True)),
+        )
+    return _WORLD
+
+
+def test_bank_resolves_packed_rows_token_exact():
+    """Packed tenants decode token-identically to the dense oracle built
+    from their identity-masked params (the bank unpacked correctly), and
+    the bank pins each row's layer mask."""
+    w = _serving_world()
+    toks = np.asarray(jax.random.randint(KEY, (4, 6), 0, 97))
+    want = w["oracle"].generate_for_tasks(toks, np.arange(4) % 4, 5)
+    # 2-row bank, 4 tenants: serve pairwise so pins fit, forcing churn
+    for pair in ((0, 1), (2, 3), (1, 2)):
+        names = [f"task{t}" for t in pair]
+        got = w["hot"].generate_for_adapters(toks[list(pair)], names, 5)
+        np.testing.assert_array_equal(got, want[list(pair)])
+    np.testing.assert_array_equal(w["hot"].adapter_bank.mask_of("task2"),
+                                  w["mask"])
+    gates = w["hot"].adapter_bank.gates()
+    assert gates.shape == (2, 2)
+    assert w["hot"].adapter_bank.mask_of("missing") is None
+
+
+def test_shared_w_bank_serves_factorized_tenants():
+    """A shared-w bank (one w row-set, per-task b) is token-identical to
+    the dense oracle over (shared w, task b) params - and stores fewer
+    adapter bytes than the dense bank."""
+    w = _serving_world()
+    toks = np.asarray(jax.random.randint(KEY, (2, 6), 0, 97))
+    for pair in ((0, 1), (2, 3)):
+        names = [f"task{t}" for t in pair]
+        want = w["shared_oracle"].generate_for_tasks(
+            toks, np.asarray(pair), 5)
+        got = w["shared_hot"].generate_for_adapters(toks, names, 5)
+        np.testing.assert_array_equal(got, want)
+    dense_b = w["hot"].adapter_bank.adapter_bytes()
+    shared_b = w["shared_hot"].adapter_bank.adapter_bytes()
+    assert w["shared_hot"].adapter_bank.shared_w
+    assert shared_b < dense_b  # (T+1) row-sets vs 2T
+    assert dense_b / (dense_b - shared_b) == pytest.approx(4.0)  # T=2 bank
+    # and through the scheduler: all 4 tenants cycle through the 2-row
+    # shared bank mid-decode, token-exact vs the shared oracle
+    from repro.serving.scheduler import Request, Scheduler
+
+    prompts = [np.asarray(jax.random.randint(
+        jax.random.fold_in(KEY, i), (5,), 0, 97)) for i in range(4)]
+    wants = [np.asarray(w["shared_oracle"].generate_for_tasks(
+        p.reshape(1, -1), np.array([t]), 4))[0]
+        for t, p in enumerate(prompts)]
+    sched = Scheduler(w["shared_hot"], num_slots=2, max_len=16)
+    done, _ = sched.run([Request(prompt=p, max_new_tokens=4,
+                                 adapter=f"task{t}")
+                         for t, p in enumerate(prompts)])
+    for t, c in enumerate(done):
+        np.testing.assert_array_equal(c.tokens, wants[t], err_msg=f"task{t}")
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_scheduler_fuzz_mixed_sparse_dense_vs_oracle(seed):
+    """Randomized traffic mixing dense, packed-pruned, and shared-style
+    tenants through a 2-row bank (evictions + reloads mid-stream) is
+    token-exact against the lock-step dense oracle."""
+    from repro.serving.scheduler import Request, Scheduler
+
+    w = _serving_world()
+    rs = np.random.RandomState(800 + seed)
+    n_req = 10
+    reqs, wants = [], []
+    for i in range(n_req):
+        plen = int(rs.randint(2, 9))
+        budget = int(rs.randint(1, 7))
+        task = int(rs.randint(0, 4))
+        prompt = rs.randint(0, 97, size=(plen,)).astype(np.int32)
+        ref_toks = np.asarray(w["oracle"].generate_for_tasks(
+            prompt.reshape(1, -1), np.array([task]), budget))[0]
+        eos = int(ref_toks[rs.randint(0, budget)]) if rs.rand() < 0.3 else None
+        if eos is not None:
+            hit = np.flatnonzero(ref_toks == eos)
+            ref_toks = ref_toks[: hit[0] + 1]
+        reqs.append((int(rs.randint(0, 8)), Request(
+            prompt=prompt, max_new_tokens=budget, adapter=f"task{task}",
+            eos_id=eos)))
+        wants.append(ref_toks)
+
+    sched = Scheduler(w["hot"], num_slots=2, max_len=16)
+    ids = [None] * n_req
+    t = 0
+    while None in ids or sched.pending or sched.active:
+        for i, (arr, r) in enumerate(reqs):
+            if ids[i] is None and arr <= t:
+                ids[i] = sched.submit(r)
+        sched.step()
+        t += 1
+        assert t < 500, "episode failed to drain"
+    for i, rid in enumerate(ids):
+        c = sched.completions.pop(rid)
+        np.testing.assert_array_equal(c.tokens, wants[i],
+                                      err_msg=f"seed {seed} req {i}")
+
+
+def test_wrong_arch_packed_delta_fails_loud_validation():
+    """A delta published from a different architecture must die in
+    validate_adapter_row's curated every-mismatch ValueError - not in
+    the sparse layer-mask indexing that follows it."""
+    from repro.common.types import Group, Slot
+    from repro.serving.engine import MultiTaskEngine
+    from repro.serving.registry import AdapterBank, AdapterRegistry
+
+    cfg = _cfg()
+    big = peft.attach(tiny_cfg(groups=(Group((Slot("attn"),), 4),)),
+                      peft.strategy("hadamard"))
+    base = M.init_params(KEY, cfg)
+    wrong = extract_delta(perturb_adapters(M.init_params(KEY, big), KEY))
+    wrong = prune.prune_delta(wrong, big, imp.depth_mask(big, 2))
+    registry = AdapterRegistry(tempfile.mkdtemp())
+    registry.publish("alien", wrong)
+    eng = MultiTaskEngine(cfg, AdapterBank(cfg, base, 2, registry))
+    with pytest.raises(ValueError, match="does not fit bank"):
+        eng.acquire_adapter("alien")
+
+
+def test_prune_delta_accepts_packed_input_and_mask_guard():
+    """Re-pruning a registry-loaded packed delta works (unpack first, new
+    mask wins); apply_layer_mask itself refuses packed leaves loudly."""
+    cfg = _cfg()
+    delta = extract_delta(perturb_adapters(M.init_params(KEY, cfg), KEY,
+                                           scale=0.3))
+    once = prune.prune_delta(delta, cfg, np.array([True, True]))
+    again = prune.prune_delta(once, cfg, np.array([False, True]))
+    np.testing.assert_array_equal(prune.delta_mask(again, cfg),
+                                  np.array([False, True]))
+    want = imp.apply_layer_mask(delta, cfg, np.array([False, True]))
+    for (pa, a), (_, b) in zip(tu.flatten_with_paths(
+            prune.unpack_delta(again)), tu.flatten_with_paths(want)):
+        if a is not None:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=pa)
+    with pytest.raises(ValueError, match="unpack_delta"):
+        imp.apply_layer_mask(once, cfg, np.array([False, True]))
+    # factorize likewise tolerates packed tenants
+    sa = shared.factorize({"a": once, "b": once}, cfg)
+    assert sa.tasks == ["a", "b"]
+
+
+def test_shared_w_bank_rejects_deviant_tenant_w():
+    """A tenant whose published w genuinely differs from the bank's
+    shared w must be refused at insert - a shared-w bank would otherwise
+    silently serve it under the wrong transform."""
+    from repro.serving.registry import AdapterBank, AdapterRegistry
+
+    cfg, base, variants = _shared_world()
+    sa = shared.factorize(
+        {f"t{i}": extract_delta(v) for i, v in enumerate(variants)}, cfg)
+    registry = AdapterRegistry(tempfile.mkdtemp())
+    registry.publish("ok", extract_delta(variants[0]))
+    deviant = perturb_adapters(variants[0], jax.random.fold_in(KEY, 999),
+                               leaves=("w",), scale=1.0)
+    registry.publish("deviant", extract_delta(deviant))
+    bank = AdapterBank(cfg, shared.shared_w_overlay(base, sa), 2, registry,
+                       shared_w=True)
+    bank.acquire("ok")  # same stem w: accepted
+    bank.release("ok")
+    with pytest.raises(ValueError, match="deviates from the bank's shared"):
+        bank.acquire("deviant")
+    assert "deviant" not in bank.resident  # nothing half-inserted
+
+
+def test_peft_layer_gate_clamps_out_of_range():
+    """Historical tolerance preserved: top_layers 0 gates everything off,
+    > n_layers gates nothing (no ValueError from the public peft API)."""
+    cfg = _cfg()
+    p = M.init_params(KEY, cfg)
+    g0 = dict(tu.flatten_with_paths(peft.layer_gate(p, cfg, 0)))
+    assert np.asarray(g0["blocks/g0/slot0/adapter/w"]).ravel().tolist() == \
+        [0.0, 0.0]
+    g9 = dict(tu.flatten_with_paths(peft.layer_gate(p, cfg, 9)))
+    assert np.asarray(g9["blocks/g0/slot0/adapter/w"]).ravel().tolist() == \
+        [1.0, 1.0]
+
+
+def test_zero_retraces_across_sparse_hot_swaps():
+    """After all the churn above (packed + dense tenants cycling through a
+    2-row bank, shared bank swaps), every engine's decode tick compiled
+    exactly once, and no pins leaked."""
+    w = _serving_world()
+    for eng in (w["hot"], w["shared_hot"]):
+        assert eng.trace_counts["decode"] == 1, eng.trace_counts
+        bank = eng.adapter_bank
+        assert bank.stats()["loads"] >= 3
+        for name in list(bank.resident):
+            assert bank.pins(name) == 0, name
+    assert w["hot"].adapter_bank.evictions >= 1
