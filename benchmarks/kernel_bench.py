@@ -41,6 +41,32 @@ def run(fast: bool = True):
     _, us = timed(f, q, k, v)
     record("kernel/attention_dense_jnp", us, f"S={S},H={H},GQA={H//KH}")
 
+    # decode attention over the same kv length: contiguous flash vs the
+    # paged gather through a block table (block 0 is the reserved null)
+    page = 64
+    nb = S // page
+    kd = jax.random.normal(jax.random.fold_in(KEY, 9), (2, KH, S, D))
+    vd = jax.random.normal(jax.random.fold_in(KEY, 10), (2, KH, S, D))
+    qd = jax.random.normal(jax.random.fold_in(KEY, 11), (2, H, D))
+    f = jax.jit(lambda q, k, v: ops.flash_attention(
+        q[:, :, None], k, v, causal=False, impl="jnp"))
+    _, base_us = timed(f, qd, kd, vd)
+    record("kernel/decode_contiguous_jnp", base_us, f"S={S},page=-")
+    kp = kd.transpose(0, 2, 1, 3).reshape(2 * nb, page, KH, D)
+    kp = jnp.concatenate([jnp.zeros_like(kp[:1]), kp])
+    vp = vd.transpose(0, 2, 1, 3).reshape(2 * nb, page, KH, D)
+    vp = jnp.concatenate([jnp.zeros_like(vp[:1]), vp])
+    tables = 1 + jnp.arange(2 * nb, dtype=jnp.int32).reshape(2, nb)
+    kv_lens = jnp.full((2,), S, jnp.int32)
+    f = jax.jit(lambda q, k, v, t, l: ops.paged_attention(
+        q, k, v, t, l, impl="jnp"))
+    _, us = timed(f, qd, kp, vp, tables, kv_lens)
+    record("kernel/decode_paged_jnp", us,
+           f"S={S},page={page},{base_us / max(us, 1e-9):.2f}x_vs_contig")
+    _, us = timed(lambda: ops.paged_attention(
+        qd, kp, vp, tables, kv_lens, impl="interpret"))
+    record("kernel/decode_paged_interpret", us, f"S={S},page={page}")
+
     T, n = (128, 32) if fast else (512, 64)
     r = jax.random.normal(KEY, (2, 4, T, n))
     kk = jax.random.normal(jax.random.fold_in(KEY, 4), (2, 4, T, n))

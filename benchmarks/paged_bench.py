@@ -1,0 +1,171 @@
+"""Paged-KV pricing: what do block tables + int8 KV blocks buy at serve
+time?
+
+Two row groups, matching the two claims on the serving path:
+
+  * `paged/slots_per_gb_*` - KV-byte accounting per resident request at
+    worst-case occupancy (every slot pinned to its full `max_len` cover).
+    Contiguous fp32 is the baseline; paged fp32 must land within the
+    single-null-block overhead of it (paging is free at full occupancy),
+    and paged int8 must clear the >= 2x acceptance line (int8 payload +
+    per-token fp32 scales vs fp32 values). The derived column also prices
+    the mean-occupancy win: short requests pin ceil(len/page) blocks
+    instead of a whole max_len slot.
+  * `paged/ttft_*` - cold vs warm mean TTFT through one PagedScheduler
+    over a request stream where every prompt shares a >= 50% stem with
+    its neighbours. The warm pass replays the identical prompts: full
+    prefix hits must skip the prefill forward entirely (stored-logit
+    replay), so warm TTFT must be <= 0.2x cold. Mixed tenants (static
+    MultiTaskEngine bank) with the paged decode tick traced exactly once
+    across the whole episode.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import record
+
+
+def _bench_cfg(fast: bool):
+    from repro.common.types import AdapterCfg, Group, ModelCfg, Slot
+
+    layers = 4 if fast else 8
+    return ModelCfg(
+        name="paged-bench", family="decoder", d_model=256, n_heads=8,
+        n_kv_heads=2, head_dim=32, d_ff=1024, vocab_size=97,
+        groups=(Group((Slot("attn"),), layers),),
+        param_dtype="float32", compute_dtype="float32",
+        tie_embeddings=True, max_seq_len=128,
+        adapter=AdapterCfg(kind="hadamard"),
+        q_chunk=16, kv_chunk=16, sequence_sharding=False)
+
+
+def _tree_bytes(tree) -> int:
+    from repro.quant.qtensor import is_qtensor
+
+    total = 0
+    for leaf in jax.tree.leaves(tree, is_leaf=is_qtensor):
+        if is_qtensor(leaf):
+            total += leaf.values.nbytes + leaf.scales.nbytes
+        else:
+            total += leaf.nbytes
+    return total
+
+
+def _slots_per_gb(fast: bool) -> None:
+    from repro.models import model as M
+
+    cfg = _bench_cfg(fast)
+    max_len = 64 if fast else 128
+    page = 16
+    nb_max = max_len // page
+
+    # contiguous: one slot = one private (1, max_len) cache region
+    b_contig = _tree_bytes(M.init_decode_caches(cfg, 1, max_len))
+
+    rows = {"contiguous_fp32": b_contig}
+    for name, quant in (("paged_fp32", None), ("paged_int8", "int8")):
+        # +1: block 0 is the shared null block, amortized across slots -
+        # price the marginal cover of one request at full occupancy
+        pool = M.init_paged_pool(cfg, nb_max + 1, page, quant=quant)
+        rows[name] = _tree_bytes(pool) * nb_max // (nb_max + 1)
+
+    # mean-occupancy note: a prompt+budget covering half of max_len pins
+    # half the pages, while a contiguous slot always reserves max_len
+    half_cover = (nb_max // 2) / nb_max
+    for name, per_slot in rows.items():
+        slots = 2**30 / per_slot
+        eff = per_slot if name == "contiguous_fp32" else per_slot * half_cover
+        record(f"paged/slots_per_gb_{name}", 0.0,
+               f"{slots:.0f} slots/GiB ({per_slot / 2**20:.3f}MiB/slot "
+               f"worst-case, {2**30 / eff:.0f}/GiB at 50% occupancy)")
+
+    ratio = rows["contiguous_fp32"] / rows["paged_int8"]
+    assert ratio >= 2.0, (
+        f"paged int8 KV must fit >=2x the slots of contiguous fp32 "
+        f"(got {ratio:.2f}x)")
+    record("paged/slots_per_gb_int8_vs_contiguous", 0.0,
+           f"{ratio:.2f}x (>=2x acceptance)")
+
+
+def _ttft_warm_vs_cold(fast: bool) -> None:
+    from repro.core.hadamard import perturb_adapters
+    from repro.models import model as M
+    from repro.serving.engine import MultiTaskEngine
+    from repro.serving.paged import PagedScheduler
+    from repro.serving.scheduler import Request
+
+    cfg = _bench_cfg(fast)
+    key = jax.random.PRNGKey(0)
+    base = M.init_params(key, cfg)
+    tasks = [perturb_adapters(base, jax.random.fold_in(key, 60 + t),
+                              scale=0.2) for t in range(3)]
+    eng = MultiTaskEngine(cfg, tasks)
+
+    # one slot per request: TTFT then prices admission (prefill forward vs
+    # stored-logit replay), not queue depth behind busy slots
+    max_len, page, budget = 64, 16, 8
+    nb_max = max_len // page
+    num_slots = 8
+    sched = PagedScheduler(eng, num_slots=num_slots,
+                           num_blocks=1 + 2 * num_slots * nb_max,
+                           page=page, max_len=max_len)
+
+    rs = np.random.RandomState(7)
+
+    def stream(stems, n_req):
+        # every prompt = 3-page shared stem (~90% of the prompt) + a short
+        # private tail; tenants are grouped by stem so stem pages actually
+        # share (the prefix cache is per-adapter-row)
+        reqs = []
+        for i in range(n_req):
+            g = i % len(stems)
+            tail = rs.randint(0, cfg.vocab_size,
+                              size=(int(rs.randint(3, 7)),))
+            prompt = np.concatenate([stems[g], tail]).astype(np.int32)
+            reqs.append(Request(prompt=prompt, max_new_tokens=budget,
+                                task_id=g % len(tasks)))
+        return reqs
+
+    def stems_for(tag):
+        return [rs.randint(0, cfg.vocab_size, size=(3 * page,))
+                for _ in range(tag)]
+
+    # compile pass at the same padded shapes - twice, so the repeat run
+    # also compiles the full-hit COW fork - then drop its prefix pins so
+    # the cold pass below starts from a miss
+    creqs = stream(stems_for(2), 4)
+    sched.run(creqs)
+    sched.run(creqs)
+    sched.prefix.clear(sched.alloc)
+
+    reqs = stream(stems_for(2), 8)
+    _, cold = sched.run(reqs)
+    _, warm = sched.run(reqs)
+
+    pr = sched.pool_report()
+    assert pr["full_hits"] >= len(reqs), pr  # warm pass replayed every req
+    assert eng.trace_counts["decode_paged"] == 1, eng.trace_counts
+
+    cold_us = cold["mean_ttft_s"] * 1e6
+    warm_us = warm["mean_ttft_s"] * 1e6
+    assert warm_us <= 0.2 * cold_us, (
+        f"warm TTFT {warm_us:.0f}us must be <=0.2x cold {cold_us:.0f}us")
+    record("paged/ttft_cold", cold_us,
+           f"{cold['tokens_per_s']:.1f}tok/s, cold={pr['cold']} "
+           f"partial={pr['partial_hits']}")
+    record("paged/ttft_warm", warm_us,
+           f"{warm_us / cold_us:.3f}x_vs_cold (<=0.2x acceptance), "
+           f"full_hits={pr['full_hits']}, decode_paged traced "
+           f"{eng.trace_counts['decode_paged']}x")
+
+
+def run(fast: bool = True) -> None:
+    print("# paged KV cache: slots-per-GB and prefix-sharing TTFT")
+    _slots_per_gb(fast)
+    _ttft_warm_vs_cold(fast)
+
+
+if __name__ == "__main__":
+    run()

@@ -87,6 +87,25 @@ def run(fast: bool = True) -> None:
                f"({backbone_ratio:.2f}x; matmul-leaves {qs['ratio']:.2f}x "
                f"over {qs['n_quantized_leaves']} leaves)")
 
+    # KV-cache bytes ride along: on the paged serving path the cache is a
+    # block pool, and quantized blocks shrink it independently of the
+    # backbone (per-token scales vs per-channel weight scales)
+    from repro.quant.qtensor import is_qtensor
+
+    def kv_bytes(quant):
+        pool = M.init_paged_pool(cfg, num_blocks=9, page=16, quant=quant)
+        return sum(
+            (leaf.values.nbytes + leaf.scales.nbytes)
+            if is_qtensor(leaf) else leaf.nbytes
+            for leaf in jax.tree.leaves(pool, is_leaf=is_qtensor))
+
+    kv32 = kv_bytes(None)
+    for m in modes:
+        record(f"quant/kv_bytes_{m}", 0.0,
+               f"paged KV pool {kv32 / 2**20:.3f}->"
+               f"{kv_bytes(m) / 2**20:.3f}MiB "
+               f"({kv32 / kv_bytes(m):.2f}x at 8 blocks of 16 tokens)")
+
     # --- prefill / decode latency ---
     lat = {}
     for name, eng in engines.items():

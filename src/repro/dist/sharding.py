@@ -267,6 +267,48 @@ def slot_cache_shardings(caches, cfg, mesh):
 
 
 # ---------------------------------------------------------------------------
+# Paged block pools (serving/paged.py)
+# ---------------------------------------------------------------------------
+
+
+def paged_cache_spec(path: str, shape: Sequence[int], cfg, mesh) -> P:
+    """PartitionSpec for one paged block-pool leaf.
+
+    Pool leaves are (repeats, num_blocks, page, KH, Dh) - or their QTensor
+    values/scales components. The block dim is the allocator's free list:
+    blocks are handed out one at a time to arbitrary slots by host-side
+    refcounting, so sharding it would turn every allocate-on-write into a
+    resharding collective and couple pool capacity to the mesh shape; it
+    stays replicated, like the slot dim of `slot_cache_spec`. Model
+    parallelism goes on the kv-head dim (head_dim MQA fallback), so every
+    device holds the full block table's worth of its head shard and the
+    paged gather stays local.
+    """
+    qt = _QT_LEAF_RE.search(path)
+    if qt is not None:
+        path = path[: qt.start()]
+    ndim = len(shape)
+    entries: List = [None] * ndim
+    if _CACHE_KV_RE.search(path) and ndim >= 5:
+        m = mesh_axis_sizes(mesh).get("model", 1)
+        if m > 1:
+            if shape[-2] % m == 0 and shape[-2] >= m:
+                entries[-2] = "model"  # shard kv heads
+            elif shape[-1] % m == 0 and shape[-1] >= m:
+                entries[-1] = "model"  # MQA fallback: shard head_dim
+    return P(*entries)
+
+
+def paged_cache_shardings(pool, cfg, mesh):
+    """Map a paged block-pool tree to NamedShardings via `paged_cache_spec`."""
+    def one(path, leaf):
+        shape = getattr(leaf, "shape", ())
+        return NamedSharding(mesh, paged_cache_spec(path, shape, cfg, mesh))
+
+    return tu.map_with_path(one, pool)
+
+
+# ---------------------------------------------------------------------------
 # Adapter-bank rows (hot-swap serving, serving/registry.py)
 # ---------------------------------------------------------------------------
 

@@ -108,3 +108,132 @@ def flash_attention_tpu(q, k, v, *, causal: bool = True,
         ],
         interpret=interpret,
     )(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# Paged decode attention (block-table gather via scalar prefetch)
+# ---------------------------------------------------------------------------
+
+
+def _paged_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, *rest,
+                  scale: float, cap: float, window: Optional[int],
+                  page: int, nbt: int, ring: int, quant: bool):
+    """One decode token per sequence; grid (B, H, nbt), kv-block innermost.
+
+    The block table never reaches the kernel body's data path: it is a
+    scalar-prefetch argument consumed by the K/V BlockSpec index maps, so
+    each grid step DMAs exactly the physical page the table names - the
+    gather IS the pipeline. len_ref carries the per-row valid length
+    (linear) or the current write position (ring window, validity entirely
+    positional). With `quant`, K/V pages arrive int8 alongside their
+    per-token scale pages and are widened in-register before the MXU.
+    """
+    if quant:
+        ks_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        o_ref, m_scr, l_scr, acc_scr = rest
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)  # (1, D)
+    k = k_ref[0, :, 0].astype(jnp.float32)  # (page, D)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    if quant:
+        k = k * ks_ref[0, :, 0].astype(jnp.float32)  # (page, 1) scales
+        v = v * vs_ref[0, :, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if cap:
+        s = jnp.tanh(s / cap) * cap
+
+    # li: logical index into the gathered sequence this page covers
+    li = j * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+    if window is None:
+        valid = li < len_ref[b]  # per-row valid prefix
+    else:
+        # ring layout in the first `ring` logical slots: slot li holds the
+        # latest position p <= wp with p % ring == li; ring <= window, so
+        # p >= 0 already implies wp - p < window
+        wp = len_ref[b]
+        p = wp - ((wp - li) % ring)
+        valid = (li < ring) & (p >= 0)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p_ = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p_.sum(axis=-1)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+        p_, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(j == nbt - 1)
+    def _finish():
+        l = l_scr[...]
+        safe = jnp.where(l > 0, l, 1.0)
+        o_ref[0] = (acc_scr[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+def paged_attention_tpu(q, k_pool, v_pool, tables, kv_lens, *,
+                        window: Optional[int] = None,
+                        scale: Optional[float] = None, cap: float = 0.0,
+                        k_scales=None, v_scales=None,
+                        interpret: bool = True):
+    """Paged decode attention. q: (B, H, D) - one token per sequence;
+    k_pool/v_pool: (num_blocks, page, KH, D) block pools (int8 when
+    k_scales/v_scales (num_blocks, page, KH, 1) are given); tables:
+    (B, nbt) int32 physical block ids; kv_lens: (B,) int32 valid length
+    (linear) or current write position (windowed). Forward only - the
+    decode path never differentiates."""
+    B, H, D = q.shape
+    KH, page = k_pool.shape[2], k_pool.shape[1]
+    nbt = tables.shape[1]
+    G = H // KH
+    scale = scale if scale is not None else D**-0.5
+    size = nbt * page
+    ring = min(window, size) if window is not None else size
+    quant = k_scales is not None
+
+    kern = functools.partial(
+        _paged_kernel, scale=float(scale), cap=float(cap), window=window,
+        page=page, nbt=nbt, ring=ring, quant=quant)
+
+    kv_spec = pl.BlockSpec(
+        (1, page, 1, D), lambda b, h, j, tbl, kl: (tbl[b, j], 0, h // G, 0))
+    sc_spec = pl.BlockSpec(
+        (1, page, 1, 1), lambda b, h, j, tbl, kl: (tbl[b, j], 0, h // G, 0))
+    in_specs = [
+        pl.BlockSpec((1, 1, D), lambda b, h, j, tbl, kl: (b, h, 0)),
+        kv_spec, kv_spec,
+    ]
+    args = [tables.astype(jnp.int32), kv_lens.astype(jnp.int32),
+            q, k_pool, v_pool]
+    if quant:
+        in_specs += [sc_spec, sc_spec]
+        args += [k_scales, v_scales]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, H, nbt),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, D), lambda b, h, j, tbl, kl: (b, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, D), jnp.float32),
+        interpret=interpret,
+    )(*args)

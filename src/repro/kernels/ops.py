@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.attention import flash_attention_tpu
+from repro.kernels.attention import flash_attention_tpu, paged_attention_tpu
 from repro.kernels.hadamard import fused_adapter_residual_norm, hadamard_affine
 from repro.kernels.multitask import multitask_hadamard_tpu
 from repro.kernels.quant import dequant_matmul_tpu
@@ -63,6 +63,29 @@ def flash_attention(q, k, v, causal: bool = True, window: Optional[int] = None,
     return flash_attention_tpu(q, k, v, causal=causal, window=window,
                                scale=scale, cap=cap,
                                interpret=impl == "interpret", **tiles)
+
+
+def paged_attention(q, k_pool, v_pool, tables, kv_lens,
+                    window: Optional[int] = None,
+                    scale: Optional[float] = None, cap: float = 0.0,
+                    k_scales=None, v_scales=None, impl: str = "auto"):
+    """Decode attention straight out of a paged block pool.
+
+    q: (B, H, D); k_pool/v_pool: (num_blocks, page, KH, D) (int8 when
+    k_scales/v_scales are given); tables: (B, nbt) block ids; kv_lens:
+    (B,) valid length (linear) / write position (windowed). The Pallas
+    path consumes the table via scalar prefetch - BlockSpec index maps
+    DMA exactly the pages the table names, no gathered copy of the
+    sequence ever exists in HBM."""
+    impl = _resolve(impl)
+    if impl == "jnp":
+        return ref.paged_attention_ref(q, k_pool, v_pool, tables, kv_lens,
+                                       window=window, scale=scale, cap=cap,
+                                       k_scales=k_scales, v_scales=v_scales)
+    return paged_attention_tpu(q, k_pool, v_pool, tables, kv_lens,
+                               window=window, scale=scale, cap=cap,
+                               k_scales=k_scales, v_scales=v_scales,
+                               interpret=impl == "interpret")
 
 
 def wkv6(r, k, v, w, u, impl: str = "auto", chunk: int = 64):

@@ -96,6 +96,53 @@ def attention_ref(q, k, v, *, causal: bool = True, window: Optional[int] = None,
     return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
 
 
+def paged_attention_ref(q, k_pool, v_pool, tables, kv_lens, *,
+                        window: Optional[int] = None,
+                        scale: Optional[float] = None, cap: float = 0.0,
+                        k_scales=None, v_scales=None):
+    """Dense oracle for paged decode attention.
+
+    q: (B, H, D) - one query token per sequence; k_pool/v_pool:
+    (num_blocks, page, KH, D) block pools (int8 with per-token k_scales/
+    v_scales (num_blocks, page, KH, 1)); tables: (B, nbt) physical block
+    ids; kv_lens: (B,) valid length (linear) or current write position
+    (windowed - validity is then purely positional over the ring layout).
+    Returns (B, H, D) fp32.
+    """
+    B, H, D = q.shape
+    page, KH = k_pool.shape[1], k_pool.shape[2]
+    nbt = tables.shape[1]
+    size = nbt * page
+    G = H // KH
+    scale = scale if scale is not None else D**-0.5
+
+    def gather(pool, scales):
+        g = pool[tables].astype(jnp.float32)  # (B, nbt, page, KH, D)
+        if scales is not None:
+            g = g * scales[tables].astype(jnp.float32)
+        return g.reshape(B, size, KH, D)
+
+    k = gather(k_pool, k_scales)
+    v = gather(v_pool, v_scales)
+    k = jnp.repeat(k, G, axis=2)  # (B, size, H, D)
+    v = jnp.repeat(v, G, axis=2)
+
+    s = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32), k) * scale
+    if cap:
+        s = jnp.tanh(s / cap) * cap
+    li = jnp.arange(size)[None, :]  # logical gathered index
+    if window is None:
+        valid = li < kv_lens[:, None]
+    else:
+        ring = min(window, size)
+        wp = kv_lens[:, None]
+        p = wp - ((wp - li) % ring)
+        valid = (li < ring) & (p >= 0)
+    s = jnp.where(valid[:, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhk,bkhd->bhd", p, v)
+
+
 # --- rwkv6 wkv ---------------------------------------------------------------
 
 

@@ -94,6 +94,24 @@ def main():
                          "row-set and per-tenant inserts scatter only b - "
                          "T tenants cost (T+1) row-sets instead of 2T. "
                          "Requires --adapter-dir")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help=">0: paged KV serving (serving/paged.py) - block-"
+                         "table cache with this many tokens per page, "
+                         "copy-on-write prefix sharing and admission gated "
+                         "on free blocks instead of whole slots")
+    ap.add_argument("--kv-blocks", type=int, default=0,
+                    help="physical blocks in the paged pool (0 = size for "
+                         "num_slots worst-case requests plus 50%% headroom)")
+    ap.add_argument("--prefix-cache", dest="prefix_cache",
+                    action="store_true", default=True,
+                    help="share identical prompt prefixes across requests "
+                         "(default on; paged mode only)")
+    ap.add_argument("--no-prefix-cache", dest="prefix_cache",
+                    action="store_false")
+    ap.add_argument("--kv-quant", default="", choices=["", "int8", "fp8"],
+                    help="store paged KV blocks quantized with per-token "
+                         "scales (4x smaller than fp32; dequantized at the "
+                         "attention gather)")
     ap.add_argument("--top-k", type=int, default=0,
                     help=">0: per-request top-k sampling (greedy otherwise)")
     ap.add_argument("--stream", action="store_true",
@@ -241,9 +259,31 @@ def main():
     # bucket prompt lengths where the config allows it so the staggered
     # request stream doesn't compile one prefill per distinct length
     max_len = args.prompt_len + args.new_tokens
-    sched = Scheduler(
-        engine, num_slots=args.num_slots, max_len=max_len, stream=stream,
-        prefill_bucket=8 if Scheduler.supports_bucketing(cfg) else None)
+    bucket = 8 if Scheduler.supports_bucketing(cfg) else None
+    if args.page_size > 0:
+        from repro.serving.paged import PagedScheduler
+
+        page = args.page_size
+        max_len = -(-max_len // page) * page  # page-aligned cache budget
+        nb_worst = max_len // page
+        num_blocks = args.kv_blocks or 1 + args.num_slots * nb_worst * 3 // 2
+        if bucket is not None and bucket % page:
+            bucket = page * (-(-bucket // page))
+        sched = PagedScheduler(
+            engine, num_slots=args.num_slots, num_blocks=num_blocks,
+            page=page, max_len=max_len, kv_quant=args.kv_quant or None,
+            prefix_cache=args.prefix_cache, stream=stream,
+            prefill_bucket=bucket)
+        print(f"paged KV: {num_blocks - 1} x {page}-token blocks"
+              + (f", {args.kv_quant} blocks" if args.kv_quant else "")
+              + ("" if args.prefix_cache else ", prefix cache off"))
+    else:
+        if args.kv_quant:
+            raise SystemExit("--kv-quant requires paged serving "
+                             "(pass --page-size)")
+        sched = Scheduler(
+            engine, num_slots=args.num_slots, max_len=max_len, stream=stream,
+            prefill_bucket=bucket)
 
     if registry is not None and args.tasks > 1:
         # multi-tenant lifecycle: the LAST task's tenant shows up only
@@ -299,6 +339,12 @@ def main():
           f"{report['tokens_per_s']:.1f} tok/s; "
           f"mean ttft {report['mean_ttft_s'] * 1e3:.0f}ms, "
           f"mean latency {report['mean_latency_s'] * 1e3:.0f}ms")
+    if args.page_size > 0:
+        pr = sched.pool_report()
+        print(f"pool: {pr['live_blocks']}/{pr['num_blocks']} blocks live, "
+              f"{pr['prefix_full_entries']} cached prompts; "
+              f"{pr['full_hits']} full / {pr['partial_hits']} partial "
+              f"prefix hits, {pr['cold']} cold prefills")
 
 
 if __name__ == "__main__":

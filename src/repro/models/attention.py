@@ -112,6 +112,8 @@ def apply_attn(
     write_pos=None,  # decode: scalar absolute position of the new token
     adapter=None,
     adapter_cfg: Optional[AdapterCfg] = None,
+    block_tables=None,  # paged decode/extend: (B, nbt) physical block ids
+    paged_kv_len=None,  # paged extend: traced valid-length override
 ):
     B, S, _ = x.shape
     H, KH, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -151,8 +153,14 @@ def apply_attn(
                 kpos = q_pos
             else:
                 wp = jnp.asarray(write_pos, jnp.int32)
-                # scalar: all rows write position wp; (B,): per-row positions
-                kpos = wp[:, None] if wp.ndim else jnp.full((S,), wp, jnp.int32)
+                # scalar: all rows write position wp; (B,): per-row
+                # positions; (B, S): per-row-per-token (paged extend)
+                if wp.ndim == 2:
+                    kpos = wp
+                elif wp.ndim == 1:
+                    kpos = wp[:, None]
+                else:
+                    kpos = jnp.full((S,), wp, jnp.int32)
             k = apply_rope(k, kpos, cfg.rope_theta)
         if adapter is not None and acfg.kind == "ia3":
             k = k * adapter["lk"].astype(cdt).reshape(KH, Dh)
@@ -179,6 +187,50 @@ def apply_attn(
                 new_cache = {"ck": k, "cv": v}
         kv_pos = jnp.arange(k_att.shape[1])
         eff_len = k_att.shape[1]
+    elif (block_tables is not None and cache is not None
+          and write_pos is not None):  # paged decode (S=1) / extend (S>1)
+        from repro.quant.qtensor import QTensor, is_qtensor, quantize
+
+        pool_k, pool_v = cache["k"], cache["v"]
+        vals = pool_k.values if is_qtensor(pool_k) else pool_k
+        page = vals.shape[1]
+        size = block_tables.shape[1] * page  # gathered logical length
+        wp = jnp.asarray(write_pos, jnp.int32)
+        wp2 = wp if wp.ndim == 2 else wp[:, None]  # (B, S) logical positions
+        if slot.window is None:
+            li = wp2
+            kv_pos = jnp.arange(size)
+            eff_len = paged_kv_len if paged_kv_len is not None else wp + 1
+        else:
+            # ring layout inside the first ring//page table entries; the
+            # gathered tail beyond the ring carries INVALID_POS so validity
+            # is entirely positional (scheduler guarantees page | ring)
+            ring = min(slot.window, size)
+            li = wp2 % ring
+            rp = ring_positions(ring, wp)  # wp is (B,): decode only
+            kv_pos = jnp.concatenate(
+                [rp, jnp.full((B, size - ring), INVALID_POS, jnp.int32)],
+                axis=1) if size > ring else rp
+            eff_len = INVALID_POS
+        bidx = jnp.arange(B)[:, None]
+        blk = block_tables[bidx, li // page]  # (B, S) physical blocks
+        off = li % page
+        if is_qtensor(pool_k):
+            # per-token-per-head scales, computed independently at each
+            # write (absmax over Dh) - matches the pool's scales layout
+            mode = "int8" if vals.dtype == jnp.int8 else "fp8"
+            qk = quantize(k, mode, axis=-1)
+            qv = quantize(v, mode, axis=-1)
+            ck = QTensor(pool_k.values.at[blk, off].set(qk.values),
+                         pool_k.scales.at[blk, off].set(qk.scales))
+            cv = QTensor(pool_v.values.at[blk, off].set(qv.values),
+                         pool_v.scales.at[blk, off].set(qv.scales))
+        else:
+            ck = pool_k.at[blk, off].set(k.astype(pool_k.dtype))
+            cv = pool_v.at[blk, off].set(v.astype(pool_v.dtype))
+        new_cache = {"k": ck, "v": cv}
+        k_att = flash.paged_gather(ck, block_tables, cdt)
+        v_att = flash.paged_gather(cv, block_tables, cdt)
     elif cache is not None and write_pos is not None:  # self-attn decode
         size = cache["k"].shape[1]
         wp = jnp.asarray(write_pos, jnp.int32)

@@ -326,3 +326,26 @@ def attend(q, k, v, *, q_pos, kv_pos, kv_len=None, causal=True, window=None,
     return flash_attention(q, k, v, q_pos, kv_pos, kv_len,
                            causal, window, float(scale), float(cap),
                            int(q_chunk), int(kv_chunk), str(tile_dtype))
+
+
+def paged_gather(pool, tables, dtype):
+    """Gather a per-sequence contiguous KV view out of a paged block pool.
+
+    pool: (num_blocks, page, KH, Dh) fp32 array, or a QTensor whose values
+    share that shape with per-token-per-head scales (..., KH, 1).
+    tables: (B, nbt) int32 physical block ids (entry 0 is the null block -
+    its rows are garbage and must be masked by the caller's kv_len /
+    position masks). Returns (B, nbt*page, KH, Dh) in `dtype`, dequantized
+    on the fly for QTensor pools - this gathered view is exactly what
+    `attend` consumes, so the paged decode path reuses the flash kernel
+    (and its kv-chunk decomposition) unchanged.
+    """
+    from repro.quant.qtensor import is_qtensor  # deferred: acyclic imports
+
+    if is_qtensor(pool):
+        g = (jnp.take(pool.values, tables, axis=0).astype(jnp.float32)
+             * jnp.take(pool.scales, tables, axis=0).astype(jnp.float32))
+    else:
+        g = jnp.take(pool, tables, axis=0)
+    B, nbt, page = g.shape[:3]
+    return g.reshape(B, nbt * page, *g.shape[3:]).astype(dtype)

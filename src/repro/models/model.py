@@ -22,7 +22,12 @@ import jax.numpy as jnp
 from repro.common.types import ModelCfg
 from repro.dist.api import constrain
 from repro.models.layers import apply_norm, dense_init, embed_init, norm_init, softcap
-from repro.models.program import group_apply, group_cache_init, group_init
+from repro.models.program import (
+    group_apply,
+    group_cache_init,
+    group_init,
+    group_pool_init,
+)
 from repro.quant.qtensor import qdense
 
 # ---------------------------------------------------------------------------
@@ -110,7 +115,7 @@ def lm_logits(params, cfg: ModelCfg, h):
 
 def _run_groups(params, cfg: ModelCfg, groups, blocks_key, x, *, q_pos, causal,
                 mode="train", caches=None, cache_len=None, write_pos=None,
-                enc_out=None):
+                enc_out=None, block_tables=None, paged_kv_len=None):
     aux_total = jnp.zeros((), jnp.float32)
     new_caches = {}
     for i, g in enumerate(groups):
@@ -119,6 +124,7 @@ def _run_groups(params, cfg: ModelCfg, groups, blocks_key, x, *, q_pos, causal,
             q_pos=q_pos, causal=causal, mode=mode,
             caches=(caches or {}).get(f"g{i}"), cache_len=cache_len,
             write_pos=write_pos, enc_out=enc_out,
+            block_tables=block_tables, paged_kv_len=paged_kv_len,
         )
         if nc is not None:
             new_caches[f"g{i}"] = nc
@@ -199,6 +205,61 @@ def init_decode_caches(cfg: ModelCfg, batch: int, cache_len: int):
         f"g{i}": group_cache_init(cfg, g, batch, cache_len)
         for i, g in enumerate(cfg.groups)
     }
+
+
+# ---------------------------------------------------------------------------
+# paged KV cache (block pool + block tables, serving/paged.py)
+# ---------------------------------------------------------------------------
+
+
+def init_paged_pool(cfg: ModelCfg, num_blocks: int, page: int,
+                    quant=None):
+    """One device-resident block pool per attention slot; block 0 is the
+    reserved null block (see program.group_pool_init)."""
+    return {
+        f"g{i}": group_pool_init(cfg, g, num_blocks, page, quant=quant)
+        for i, g in enumerate(cfg.groups)
+    }
+
+
+def decode_lm_paged(params, cfg: ModelCfg, pool, token, pos, block_tables):
+    """One paged decode step: like `decode_lm` but each row's KV lives in
+    pool blocks addressed through its `block_tables` row (B, nbt). pos is
+    (B,) per-row absolute positions; rows whose table is all-null (free
+    slots) write into block 0 and their logits are garbage the scheduler
+    ignores. nbt*page must equal the contiguous cache length it replaces
+    so the flash kv-chunk decomposition (and therefore every fp32 token)
+    is identical."""
+    pos = jnp.asarray(pos, jnp.int32)
+    x = embed_tokens(params, cfg, token)
+    q_pos = pos[:, None] if pos.ndim else jnp.full((1,), pos, jnp.int32)
+    x, pool, _ = _run_groups(params, cfg, cfg.groups, "blocks", x,
+                             q_pos=q_pos, causal=True, mode="decode",
+                             caches=pool, write_pos=pos,
+                             block_tables=block_tables)
+    x = apply_norm(params["final_norm"], cfg, x)
+    return lm_logits(params, cfg, x), pool
+
+
+def extend_lm(params, cfg: ModelCfg, pool, tokens, block_tables, start,
+              kv_len, last_pos):
+    """Prefix-cache partial-hit extension (B=1): run only the prompt
+    suffix `tokens` (right-padded to a page multiple) at absolute
+    positions start..start+S-1, writing its K/V into the pool blocks the
+    table maps those positions to, attending over shared prefix blocks +
+    own suffix. kv_len masks the pad tail (decode overwrites each padded
+    position before kv_len ever unmasks it - the prompt-bucketing
+    argument); last_pos indexes the last real suffix token's logits.
+    Full-attention only: ring layouts fold pad tokens in."""
+    pos = start + jnp.arange(tokens.shape[1])[None, :]  # (1, S) absolute
+    x = embed_tokens(params, cfg, tokens, positions=pos)
+    x, pool, _ = _run_groups(params, cfg, cfg.groups, "blocks", x,
+                             q_pos=pos, causal=True, mode="decode",
+                             caches=pool, write_pos=pos,
+                             block_tables=block_tables, paged_kv_len=kv_len)
+    x = jax.lax.dynamic_slice_in_dim(x, last_pos, 1, axis=1)
+    x = apply_norm(params["final_norm"], cfg, x)
+    return lm_logits(params, cfg, x), pool
 
 
 # ---------------------------------------------------------------------------

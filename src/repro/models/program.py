@@ -126,7 +126,8 @@ def block_init(key, cfg: ModelCfg, slot: Slot):
 
 
 def block_apply(p, cfg: ModelCfg, slot: Slot, x, *, q_pos, causal,
-                cache=None, cache_len=None, write_pos=None, enc_out=None):
+                cache=None, cache_len=None, write_pos=None, enc_out=None,
+                block_tables=None, paged_kv_len=None):
     """Returns (x, new_cache, aux_loss)."""
     acfg: AdapterCfg = cfg.adapter
     ad = p.get("adapter")
@@ -156,7 +157,9 @@ def block_apply(p, cfg: ModelCfg, slot: Slot, x, *, q_pos, causal,
     if slot.kind == "attn":
         a, nc = apply_attn(p["attn"], cfg, slot, h, q_pos=q_pos, causal=causal,
                            cache=c.get("attn"), cache_len=cache_len,
-                           write_pos=write_pos, adapter=ad)
+                           write_pos=write_pos, adapter=ad,
+                           block_tables=block_tables,
+                           paged_kv_len=paged_kv_len)
         if nc is not None:
             new_cache["attn"] = nc
     elif slot.kind == "rec":
@@ -246,6 +249,43 @@ def group_cache_init(cfg: ModelCfg, group: Group, batch: int, cache_len: int,
     )
 
 
+def group_pool_init(cfg: ModelCfg, group: Group, num_blocks: int, page: int,
+                    quant: Optional[str] = None):
+    """Zeroed stacked paged block pool for one group.
+
+    Every attention slot gets K/V pools of shape
+    (repeats, num_blocks, page, KH, Dh); with `quant` ('int8'/'fp8') the
+    pool leaves are QTensors with per-token-per-head scales
+    (repeats, num_blocks, page, KH, 1) - the layout the paged decode path
+    writes with `quantize(k, axis=-1)`. Block 0 is the allocator's
+    reserved null block (unmapped table entries point there and its rows
+    are masked, never read). Paged serving is attention-only: recurrent /
+    rwkv / cross-attention slots have no block-structured state.
+    """
+    from repro.quant.qtensor import QTensor, _storage_dtype
+
+    for slot in group.slots:
+        if slot.kind != "attn" or slot.cross_attn:
+            raise ValueError(
+                "paged KV pools require pure attention slots (got "
+                f"kind={slot.kind!r}, cross_attn={slot.cross_attn})")
+
+    def one_slot():
+        kv = (group.repeats, num_blocks, page, cfg.n_kv_heads, cfg.head_dim)
+
+        # distinct buffers per leaf: the pool is donated through every
+        # decode tick, and XLA rejects donating one buffer twice
+        def qt():
+            return QTensor(jnp.zeros(kv, _storage_dtype(quant)),
+                           jnp.ones(kv[:-1] + (1,), jnp.float32))
+
+        if quant:
+            return {"k": qt(), "v": qt()}
+        return {"k": jnp.zeros(kv, cfg.cdtype), "v": jnp.zeros(kv, cfg.cdtype)}
+
+    return {f"slot{i}": {"attn": one_slot()} for i in range(len(group.slots))}
+
+
 def _remat_policy(cfg: ModelCfg):
     if cfg.remat_policy == "dots":
         return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
@@ -254,11 +294,15 @@ def _remat_policy(cfg: ModelCfg):
 
 def group_apply(pg, cfg: ModelCfg, group: Group, x, *, q_pos, causal,
                 mode: str = "train", caches=None, cache_len=None,
-                write_pos=None, enc_out=None):
+                write_pos=None, enc_out=None, block_tables=None,
+                paged_kv_len=None):
     """Run `repeats` iterations of the slot pattern.
 
     mode: 'train' (no cache), 'prefill' (emit caches), 'decode' (consume +
-    emit caches, S=1).
+    emit caches; S=1, or S>1 for a paged extend).
+    block_tables (paged decode): one (B, nbt) table shared by every layer,
+    CLOSED OVER by the scan body - the per-layer block pools are what scan
+    slices, the logical->physical mapping is sequence-level state.
     Returns (x, new_caches, aux_sum).
     """
 
@@ -276,6 +320,7 @@ def group_apply(pg, cfg: ModelCfg, group: Group, x, *, q_pos, causal,
                 cache=(cache_layer or {}).get(f"slot{i}"),
                 cache_len=cache_len if mode == "prefill" else None,
                 write_pos=write_pos, enc_out=enc_out,
+                block_tables=block_tables, paged_kv_len=paged_kv_len,
             )
             aux = aux + a
             if nc is not None:

@@ -23,7 +23,8 @@ import numpy as np
 from repro.common.types import ModelCfg
 from repro.core.hadamard import build_bank, fold_adapter, select_tasks
 from repro.dist.api import current_mesh, use_mesh
-from repro.dist.sharding import params_shardings, slot_cache_shardings
+from repro.dist.sharding import (paged_cache_shardings, params_shardings,
+                                 slot_cache_shardings)
 from repro.models import model as M
 
 
@@ -74,6 +75,22 @@ class ServeEngine:
             lambda p, caches, tok, pos: M.decode_lm(p, cfg, caches, tok, pos),
             donate_argnums=(1,),
         )
+        # -- paged-pool variants (serving/paged.py). The pool tree is the
+        # single largest live allocation, so every mutation donates it.
+        self._decode_paged = jax.jit(
+            lambda p, pool, tok, pos, tbl: M.decode_lm_paged(
+                p, cfg, pool, tok, pos, tbl),
+            donate_argnums=(1,),
+        )
+        self._extend = jax.jit(
+            lambda p, pool, toks, tbl, start, kvl, lp: M.extend_lm(
+                p, cfg, pool, toks, tbl, start, kvl, lp),
+            donate_argnums=(1,),
+        )
+        self._paged_insert_jit = jax.jit(self._paged_insert_impl,
+                                         donate_argnums=(0,))
+        self._copy_block_jit = jax.jit(self._copy_block_impl,
+                                       donate_argnums=(0,))
 
     # -- mesh plumbing ------------------------------------------------------
 
@@ -118,6 +135,91 @@ class ServeEngine:
             caches = jax.device_put(
                 caches, slot_cache_shardings(caches, self.cfg, self.mesh))
         return caches
+
+    # -- paged block pool (serving/paged.py) --------------------------------
+
+    def init_paged_pool(self, num_blocks: int, page: int,
+                        kv_quant: Optional[str] = None):
+        """Zeroed device block pool: (repeats, num_blocks, page, KH, Dh)
+        per attention slot (QTensor leaves under kv_quant). Block 0 is the
+        allocator's reserved null block. Under a mesh the pool is placed
+        with the block dim replicated (kv heads model-sharded) so host-
+        driven block handoffs never trigger collectives."""
+        pool = M.init_paged_pool(self.cfg, num_blocks, page, quant=kv_quant)
+        if self.mesh is not None:
+            pool = jax.device_put(
+                pool, paged_cache_shardings(pool, self.cfg, self.mesh))
+        return pool
+
+    @staticmethod
+    def _paged_insert_impl(pool, fresh, ids):
+        """Scatter a freshly prefilled contiguous cache (B=1) into pool
+        blocks `ids`. fresh leaves (R, 1, nbl*page, KH, Dh) are repaged to
+        (R, nbl, page, KH, Dh); QTensor pools quantize per page-token on
+        the way in (absmax over Dh - the same independent-per-write rule
+        the decode path uses, so extend/prefill agree bit-for-bit)."""
+        from repro.quant.qtensor import QTensor, is_qtensor, quantize
+
+        def one(dst, src):
+            r = src[:, 0]  # (R, S, KH, Dh)
+            if is_qtensor(dst):
+                page = dst.values.shape[2]
+                mode = "int8" if dst.values.dtype == jnp.int8 else "fp8"
+                r = r.reshape(r.shape[0], -1, page, *r.shape[2:])
+                qt = quantize(r, mode, axis=-1)
+                my = ids[:r.shape[1]]  # windowed leaves cover fewer pages
+                return QTensor(dst.values.at[:, my].set(qt.values),
+                               dst.scales.at[:, my].set(qt.scales))
+            page = dst.shape[2]
+            r = r.reshape(r.shape[0], -1, page, *r.shape[2:])
+            return dst.at[:, ids[:r.shape[1]]].set(r.astype(dst.dtype))
+
+        return jax.tree.map(one, pool, fresh,
+                            is_leaf=lambda x: is_qtensor(x))
+
+    @staticmethod
+    def _copy_block_impl(pool, src, dst):
+        """COW fork: duplicate physical block src into dst on every leaf."""
+        from repro.quant.qtensor import QTensor, is_qtensor
+
+        def one(leaf):
+            if is_qtensor(leaf):
+                return QTensor(leaf.values.at[:, dst].set(leaf.values[:, src]),
+                               leaf.scales.at[:, dst].set(leaf.scales[:, src]))
+            return leaf.at[:, dst].set(leaf[:, src])
+
+        return jax.tree.map(one, pool, is_leaf=lambda x: is_qtensor(x))
+
+    def paged_insert(self, pool, fresh, bids):
+        """Write prefilled caches into the pool blocks `bids` (host list;
+        its LENGTH is a static shape, bucketed with the prefill lengths)."""
+        with self._mesh_ctx():
+            return self._paged_insert_jit(pool, fresh,
+                                          jnp.asarray(bids, jnp.int32))
+
+    def copy_block(self, pool, src: int, dst: int):
+        with self._mesh_ctx():
+            return self._copy_block_jit(pool, jnp.int32(src), jnp.int32(dst))
+
+    def paged_decode_step(self, pool, tok, pos, tables, task_ids=None):
+        """One fused decode tick against the block pool. tables is the
+        host-side (num_slots, nb_max) int32 array - a stable shape, so the
+        tick compiles exactly once."""
+        with self._mesh_ctx():
+            return self._decode_paged(self.params, pool, tok, pos,
+                                      jnp.asarray(tables))
+
+    def paged_extend(self, pool, tokens, tables, start, kv_len, last_pos,
+                     task_ids=None):
+        """Prefill a prompt suffix directly into pool blocks (prefix-cache
+        partial hit): `tokens` (1, S_pad) right-padded suffix, `start` its
+        absolute offset, `kv_len` the true total prompt length, `last_pos`
+        the in-suffix index of the true last token. Retraces per padded
+        suffix length (bucketed by the scheduler)."""
+        with self._mesh_ctx():
+            return self._extend(self.params, pool, jnp.asarray(tokens),
+                                jnp.asarray(tables), jnp.int32(start),
+                                jnp.int32(kv_len), jnp.int32(last_pos))
 
     # -- sampling -----------------------------------------------------------
 
@@ -186,7 +288,7 @@ class MultiTaskEngine(ServeEngine):
         # a fresh mix of task ids each tick re-gathers without re-placing
         # params (the gather is collective-free: adapters are replicated).
         # The python bodies bump trace_counts, making retraces observable.
-        self.trace_counts = {"prefill": 0, "decode": 0}
+        self.trace_counts = {"prefill": 0, "decode": 0, "decode_paged": 0}
 
         def _pf(bank, toks, tids, cl, lp):
             self.trace_counts["prefill"] += 1
@@ -198,8 +300,19 @@ class MultiTaskEngine(ServeEngine):
             return M.decode_lm(select_tasks(bank, tids), cfg, caches, tok,
                                pos)
 
+        def _pdc(bank, pool, tok, pos, tbl, tids):
+            self.trace_counts["decode_paged"] += 1
+            return M.decode_lm_paged(select_tasks(bank, tids), cfg, pool,
+                                     tok, pos, tbl)
+
+        def _pext(bank, pool, toks, tbl, start, kvl, lp, tids):
+            return M.extend_lm(select_tasks(bank, tids), cfg, pool, toks,
+                               tbl, start, kvl, lp)
+
         self._prefill_tasks = jax.jit(_pf, static_argnums=(3,))
         self._decode_tasks = jax.jit(_dc, donate_argnums=(1,))
+        self._decode_paged_tasks = jax.jit(_pdc, donate_argnums=(1,))
+        self._extend_tasks = jax.jit(_pext, donate_argnums=(1,))
 
     @property
     def bank(self):
@@ -245,6 +358,25 @@ class MultiTaskEngine(ServeEngine):
         with self._mesh_ctx():
             return self._decode_tasks(
                 self.bank, caches, tok, pos, jnp.asarray(task_ids, jnp.int32))
+
+    def paged_decode_step(self, pool, tok, pos, tables, task_ids=None):
+        if task_ids is None:
+            raise ValueError(
+                "MultiTaskEngine.paged_decode_step requires task_ids")
+        with self._mesh_ctx():
+            return self._decode_paged_tasks(
+                self.bank, pool, tok, pos, jnp.asarray(tables),
+                jnp.asarray(task_ids, jnp.int32))
+
+    def paged_extend(self, pool, tokens, tables, start, kv_len, last_pos,
+                     task_ids=None):
+        if task_ids is None:
+            raise ValueError("MultiTaskEngine.paged_extend requires task_ids")
+        with self._mesh_ctx():
+            return self._extend_tasks(
+                self.bank, pool, jnp.asarray(tokens), jnp.asarray(tables),
+                jnp.int32(start), jnp.int32(kv_len), jnp.int32(last_pos),
+                jnp.asarray(task_ids, jnp.int32))
 
     def generate_for_tasks(self, tokens: np.ndarray, task_ids: np.ndarray,
                            max_new_tokens: int,
