@@ -92,9 +92,8 @@ def _slots_per_gb(fast: bool) -> None:
 def _ttft_warm_vs_cold(fast: bool) -> None:
     from repro.core.hadamard import perturb_adapters
     from repro.models import model as M
-    from repro.serving.engine import MultiTaskEngine
-    from repro.serving.paged import PagedScheduler
-    from repro.serving.scheduler import Request
+    from repro.serving import (MultiTaskEngine, Request, ServingConfig,
+                               make_scheduler)
 
     cfg = _bench_cfg(fast)
     key = jax.random.PRNGKey(0)
@@ -108,9 +107,9 @@ def _ttft_warm_vs_cold(fast: bool) -> None:
     max_len, page, budget = 64, 16, 8
     nb_max = max_len // page
     num_slots = 8
-    sched = PagedScheduler(eng, num_slots=num_slots,
-                           num_blocks=1 + 2 * num_slots * nb_max,
-                           page=page, max_len=max_len)
+    sched = make_scheduler(eng, ServingConfig(
+        num_slots=num_slots, max_len=max_len, paged=True, page_size=page,
+        num_blocks=1 + 2 * num_slots * nb_max))
 
     rs = np.random.RandomState(7)
 

@@ -43,9 +43,10 @@ def _bench_cfg(fast: bool):
 
 def _serve_tok_s(engine, prompts, budget: int, num_slots: int,
                  max_len: int) -> float:
-    from repro.serving.scheduler import Request, Scheduler
+    from repro.serving import Request, ServingConfig, make_scheduler
 
-    sched = Scheduler(engine, num_slots=num_slots, max_len=max_len)
+    sched = make_scheduler(engine, ServingConfig(num_slots=num_slots,
+                                                 max_len=max_len))
     reqs = [Request(prompt=p, max_new_tokens=budget) for p in prompts]
     t0 = time.perf_counter()
     _, report = sched.run(reqs)

@@ -26,7 +26,7 @@ def main() -> None:
     ap.add_argument("--only", default="",
                     help="comma-separated subset of: table2,table3,table4,"
                          "table5,fig5,kernels,roofline,swap,quant,sparse,"
-                         "paged")
+                         "paged,spec")
     ap.add_argument("--json", default="",
                     help="write rows as JSON: {suites: {name: [{name, "
                          "us_per_call, derived}]}} plus run metadata")
@@ -37,8 +37,8 @@ def main() -> None:
     import jax
 
     from benchmarks import (common, fig5_patterns, kernel_bench, paged_bench,
-                            quant_bench, roofline, sparse_bench, swap_churn,
-                            table2_two_stage, table3_param_counts,
+                            quant_bench, roofline, sparse_bench, spec_bench,
+                            swap_churn, table2_two_stage, table3_param_counts,
                             table4_module_ablation, table5_layer_sweep)
 
     suites = [
@@ -48,6 +48,7 @@ def main() -> None:
         ("quant", quant_bench.run),
         ("sparse", sparse_bench.run),
         ("paged", paged_bench.run),
+        ("spec", spec_bench.run),
         ("roofline", roofline.run),
         ("table2", table2_two_stage.run),
         ("table4", table4_module_ablation.run),

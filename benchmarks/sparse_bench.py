@@ -51,9 +51,10 @@ def _decoder_cfg(fast: bool):
 
 def _serve_tok_s(engine, names, prompts, budget: int, num_slots: int,
                  max_len: int) -> float:
-    from repro.serving.scheduler import Request, Scheduler
+    from repro.serving import Request, ServingConfig, make_scheduler
 
-    sched = Scheduler(engine, num_slots=num_slots, max_len=max_len)
+    sched = make_scheduler(engine, ServingConfig(num_slots=num_slots,
+                                                 max_len=max_len))
     reqs = [Request(prompt=p, max_new_tokens=budget, adapter=n)
             for p, n in zip(prompts, names)]
     _, report = sched.run(reqs)

@@ -1,0 +1,177 @@
+"""Speculative-decoding pricing: what does the draft+verify tick buy, and
+does it ever cost tokens?
+
+Two row groups, matching the two claims in serving/spec.py:
+
+  * `spec/toks_*` - plain vs speculative greedy throughput through
+    `make_scheduler` at k=4 self-speculation with identity adapters (the
+    Hadamard bank as `init_params` leaves it: every task row IS the
+    backbone, so the adapter-free draft agrees with the target at every
+    position and acceptance is 100%). That isolates the mechanical win -
+    one fused k-step draft scan + one (k+1)-position verify per tick vs
+    k+1 single-token ticks - from draft quality. Gates: greedy output
+    token-identical to the plain scheduler, tok/s >= 1.2x plain, and the
+    zero-retrace invariant (verify and draft each traced exactly once
+    across the whole episode, adapter rows mixed per tick).
+  * `spec/acceptance_*` - the rejection path, over the PAGED target with
+    perturbed adapters (scale 0.01: close enough to the backbone that
+    some drafts land, far enough that most are rejected). Gates: output
+    still token-identical to plain paged greedy (rollback-by-overwrite
+    plus the correction token make acceptance a pure speed knob), and
+    0 < accepted < drafted so both branches of the acceptance loop
+    actually ran.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import record
+
+SPEC_K = 4
+
+
+def _bench_cfg(fast: bool):
+    from repro.common.types import AdapterCfg, Group, ModelCfg, Slot
+
+    # deliberately small: speculation's win is dispatch count (2 fused
+    # dispatches per up-to-k+1 tokens vs 1 per token), which a serving-
+    # sized tick is dominated by; a bench model large enough to be
+    # compute-bound on the CI CPU would just measure FLOPs, and k-step
+    # self-drafting costs the same FLOPs as k plain ticks by construction
+    layers = 2 if fast else 4
+    return ModelCfg(
+        name="spec-bench", family="decoder", d_model=64, n_heads=4,
+        n_kv_heads=2, head_dim=16, d_ff=256, vocab_size=97,
+        groups=(Group((Slot("attn"),), layers),),
+        # untied head: with tied random weights, logits ~ E @ E^T makes
+        # argmax echo the input token, so draft and target collapse to
+        # the same repeat-forever attractor and the rejection lane never
+        # rejects anything no matter how hard the adapters are perturbed
+        param_dtype="float32", compute_dtype="float32",
+        tie_embeddings=False, max_seq_len=256,
+        adapter=AdapterCfg(kind="hadamard"),
+        q_chunk=16, kv_chunk=16, sequence_sharding=False)
+
+
+def _requests(cfg, n_req: int, prompt_len: int, budget: int, n_tasks: int,
+              seed: int):
+    from repro.serving import Request
+
+    rs = np.random.RandomState(seed)
+    return [
+        Request(prompt=rs.randint(0, cfg.vocab_size,
+                                  size=(prompt_len,)).astype(np.int32),
+                max_new_tokens=budget, task_id=i % n_tasks)
+        for i in range(n_req)
+    ]
+
+
+def _assert_identical(done_plain, done_spec) -> int:
+    n_tok = 0
+    for cp, cs in zip(done_plain, done_spec):
+        assert np.array_equal(cp.tokens, cs.tokens), (
+            "speculative greedy diverged from plain greedy: "
+            f"{cp.tokens} vs {cs.tokens}")
+        n_tok += len(cs.tokens)
+    return n_tok
+
+
+def _speedup_identity(fast: bool) -> None:
+    from repro.models import model as M
+    from repro.serving import MultiTaskEngine, ServingConfig, make_scheduler
+
+    cfg = _bench_cfg(fast)
+    base = M.init_params(jax.random.PRNGKey(0), cfg)
+    # init_params leaves every Hadamard adapter at identity, so both bank
+    # rows ARE the backbone and self-drafts always match: 100% acceptance
+    eng = MultiTaskEngine(cfg, [base, base])
+
+    prompt_len = 16
+    budget = 96 if fast else 192  # long decode tail amortizes prefills
+    max_len = prompt_len + budget + SPEC_K
+    num_slots = 8
+    plain = make_scheduler(eng, ServingConfig(
+        num_slots=num_slots, max_len=max_len))
+    spec = make_scheduler(eng, ServingConfig(
+        num_slots=num_slots, max_len=max_len, spec_k=SPEC_K))
+
+    # compile pass at the same shapes for both schedulers, then time
+    warm = _requests(cfg, num_slots, prompt_len, budget, 2, seed=11)
+    plain.run(warm)
+    spec.run(warm)
+
+    reqs = _requests(cfg, 16 if fast else 32, prompt_len, budget, 2, seed=7)
+    done_p, rep_p = plain.run(list(reqs))
+    done_s, rep_s = spec.run(list(reqs))
+
+    n_tok = _assert_identical(done_p, done_s)
+    assert spec.acceptance_rate == 1.0, spec.spec_stats
+    assert eng.trace_counts["verify"] == 1, eng.trace_counts
+    assert spec.draft_lane.trace_counts["draft"] == 1, \
+        spec.draft_lane.trace_counts
+
+    ratio = rep_s["tokens_per_s"] / rep_p["tokens_per_s"]
+    record("spec/toks_plain", rep_p["elapsed_s"] * 1e6 / n_tok,
+           f"{rep_p['tokens_per_s']:.1f}tok/s over {rep_p['ticks']} ticks")
+    record("spec/toks_spec_k4", rep_s["elapsed_s"] * 1e6 / n_tok,
+           f"{rep_s['tokens_per_s']:.1f}tok/s over {rep_s['ticks']} ticks, "
+           f"accept={spec.acceptance_rate:.2f}, verify traced "
+           f"{eng.trace_counts['verify']}x")
+    assert ratio >= 1.2, (
+        f"k={SPEC_K} self-speculation at 100% acceptance must clear 1.2x "
+        f"plain greedy (got {ratio:.2f}x)")
+    record("spec/toks_speedup", 0.0,
+           f"{ratio:.2f}x_vs_plain (>=1.2x acceptance, token-identical)")
+
+
+def _rejection_identity(fast: bool) -> None:
+    from repro.core.hadamard import perturb_adapters
+    from repro.models import model as M
+    from repro.serving import MultiTaskEngine, ServingConfig, make_scheduler
+
+    cfg = _bench_cfg(fast)
+    key = jax.random.PRNGKey(1)
+    base = M.init_params(key, cfg)
+    # near-identity rows: self-drafts land often but not always, so both
+    # sides of the acceptance loop (and paged KV rollback) actually run
+    tasks = [perturb_adapters(base, jax.random.fold_in(key, 80 + t),
+                              scale=0.01) for t in range(2)]
+    eng = MultiTaskEngine(cfg, tasks)
+
+    page, prompt_len, budget = 16, 16, 24
+    max_len = 64  # >= prompt + budget + spec_k, page-aligned
+    serve = dict(num_slots=8, max_len=max_len, paged=True, page_size=page)
+    plain = make_scheduler(eng, ServingConfig(**serve))
+    spec = make_scheduler(eng, ServingConfig(**serve, spec_k=SPEC_K))
+
+    warm = _requests(cfg, 8, prompt_len, budget, 2, seed=12)
+    plain.run(warm)
+    spec.run(warm)
+    plain.prefix.clear(plain.alloc)
+    spec.prefix.clear(spec.alloc)
+
+    reqs = _requests(cfg, 16, prompt_len, budget, 2, seed=8)
+    done_p, _ = plain.run(list(reqs))
+    done_s, _ = spec.run(list(reqs))
+    _assert_identical(done_p, done_s)
+
+    st = spec.spec_stats
+    assert 0 < st["accepted"] < st["drafted"], (
+        f"perturbed-adapter lane must exercise BOTH accept and reject "
+        f"paths: {st}")
+    assert eng.trace_counts["verify_paged"] == 1, eng.trace_counts
+    record("spec/acceptance_perturbed", 0.0,
+           f"{spec.acceptance_rate:.2f} accept rate over "
+           f"{st['spec_ticks']} ticks (paged target, token-identical, "
+           f"verify_paged traced {eng.trace_counts['verify_paged']}x)")
+
+
+def run(fast: bool = True) -> None:
+    print("# speculative decoding: k=4 self-spec speedup and rollback")
+    _speedup_identity(fast)
+    _rejection_identity(fast)
+
+
+if __name__ == "__main__":
+    run()

@@ -30,14 +30,15 @@ from benchmarks.common import record
 
 def _serve(engine, prompts, budgets, names_or_ids, *, named: bool,
            num_slots: int, max_len: int):
-    from repro.serving.scheduler import Request, Scheduler
+    from repro.serving import Request, ServingConfig, make_scheduler
 
     reqs = []
     for i, p in enumerate(prompts):
         kw = ({"adapter": names_or_ids[i]} if named
               else {"task_id": names_or_ids[i]})
         reqs.append(Request(prompt=p, max_new_tokens=budgets[i], **kw))
-    sched = Scheduler(engine, num_slots=num_slots, max_len=max_len)
+    sched = make_scheduler(engine, ServingConfig(num_slots=num_slots,
+                                                 max_len=max_len))
     t0 = time.perf_counter()
     done, report = sched.run(reqs)
     return done, report, time.perf_counter() - t0

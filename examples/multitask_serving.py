@@ -29,9 +29,9 @@ from repro.configs import PAPER
 from repro.core import peft
 from repro.core.hadamard import extract_delta
 from repro.data.synthetic import TaskData
-from repro.serving.engine import MultiTaskEngine, ServeEngine
-from repro.serving.registry import AdapterBank, AdapterRegistry
-from repro.serving.scheduler import Request, Scheduler
+from repro.serving import (AdapterBank, AdapterRegistry, MultiTaskEngine,
+                           Request, ServeEngine, ServingConfig,
+                           make_scheduler)
 from repro.train.loop import two_stage_finetune
 from repro.train.pretrain import pretrain_encoder
 
@@ -71,7 +71,9 @@ def main():
     prompts = np.asarray(jax.random.randint(key, (6, 12), 10, 97))
     task_ids = np.array([0, 1, 2, 0, 1, 2])
     t0 = time.perf_counter()
-    out = engine.generate_for_tasks(prompts, task_ids, max_new_tokens=6)
+    out = np.stack(engine.generate(
+        [Request(prompt=prompts[i], max_new_tokens=6, task_id=int(t))
+         for i, t in enumerate(task_ids)]))
     dt = time.perf_counter() - t0
     print(f"mixed-task batch ({task_ids.tolist()}): {out.shape} "
           f"in {dt:.2f}s")
@@ -93,15 +95,15 @@ def main():
           "adapter FLOPs at inference")
 
     # --- continuous batching: more requests than slots, mixed tasks ---
-    sched = Scheduler(engine, num_slots=2, max_len=24)
+    sched = make_scheduler(engine, ServingConfig(num_slots=2, max_len=24))
     stream = [Request(prompt=prompts[i], max_new_tokens=3 + i % 3,
                       task_id=i % 3) for i in range(6)]
     done, report = sched.run(stream)
     for c in done:
         # every request must match the lock-step engine run for its task
-        ref = engine.generate_for_tasks(
-            prompts[c.request_id:c.request_id + 1],
-            np.array([c.task_id]), len(c.tokens))
+        ref = engine.generate([Request(prompt=prompts[c.request_id],
+                                       max_new_tokens=len(c.tokens),
+                                       task_id=c.task_id)])
         assert (c.tokens == ref[0]).all()
     print(f"continuous batching (2 slots, 6 mixed-task requests): "
           f"{report['tokens']} tokens in {report['ticks']} ticks, "
@@ -118,14 +120,15 @@ def main():
         for t, params in enumerate(tasks):
             registry.publish(f"tenant{t}", extract_delta(params))
         hot = MultiTaskEngine(cfg, AdapterBank(cfg, base, 2, registry))
-        hsched = Scheduler(hot, num_slots=2, max_len=24)
+        hsched = make_scheduler(hot,
+                                ServingConfig(num_slots=2, max_len=24))
         done, _ = hsched.run(
             [Request(prompt=prompts[i], max_new_tokens=4,
                      adapter=f"tenant{i % 3}") for i in range(6)])
         for c in done:
-            ref = engine.generate_for_tasks(
-                prompts[c.request_id:c.request_id + 1],
-                np.array([int(c.adapter[-1])]), len(c.tokens))
+            ref = engine.generate([Request(prompt=prompts[c.request_id],
+                                           max_new_tokens=len(c.tokens),
+                                           task_id=int(c.adapter[-1]))])
             assert (c.tokens == ref[0]).all()
         stats = hot.adapter_bank.stats()
         assert hot.trace_counts["decode"] == 1, hot.trace_counts
@@ -140,7 +143,9 @@ def main():
 
             qhot = MultiTaskEngine(
                 cfg, AdapterBank(cfg, base, 2, registry), quant=args.quant)
-            qsched = Scheduler(qhot, num_slots=2, max_len=24)
+            qsched = make_scheduler(
+                qhot, ServingConfig(num_slots=2, max_len=24,
+                                    backbone_quant=args.quant))
             qdone, _ = qsched.run(
                 [Request(prompt=prompts[i], max_new_tokens=4,
                          adapter=f"tenant{i % 3}") for i in range(6)])

@@ -247,7 +247,9 @@ def slot_cache_spec(path: str, shape: Sequence[int], cfg, mesh) -> P:
     the dp axes would turn every admission into a resharding collective
     and tie num_slots to the mesh shape, so it stays replicated. Model
     parallelism on the kv-head/head dims applies exactly as in
-    `cache_spec` - the decode gather stays local.
+    `cache_spec` - the decode gather stays local. The speculative draft
+    lane (serving/spec.py) keeps a second slot-cache pool under these
+    same rules, so draft and target admissions shard identically.
     """
     entries = list(cache_spec(path, shape, cfg, mesh))
     while len(entries) < len(shape):

@@ -117,16 +117,19 @@ def flash_attention_tpu(q, k, v, *, causal: bool = True,
 
 def _paged_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, *rest,
                   scale: float, cap: float, window: Optional[int],
-                  page: int, nbt: int, ring: int, quant: bool):
-    """One decode token per sequence; grid (B, H, nbt), kv-block innermost.
+                  page: int, nbt: int, ring: int, sq: int, quant: bool):
+    """Sq decode tokens per sequence; grid (B, H, nbt), kv-block innermost.
 
     The block table never reaches the kernel body's data path: it is a
     scalar-prefetch argument consumed by the K/V BlockSpec index maps, so
     each grid step DMAs exactly the physical page the table names - the
     gather IS the pipeline. len_ref carries the per-row valid length
-    (linear) or the current write position (ring window, validity entirely
-    positional). With `quant`, K/V pages arrive int8 alongside their
-    per-token scale pages and are widened in-register before the MXU.
+    through the LAST query (linear) or the last query's write position
+    (ring window, validity entirely positional); for sq > 1 (speculative
+    multi-token verify) each query i sits at the right-aligned position
+    len - sq + i and masks per-query. With `quant`, K/V pages arrive int8
+    alongside their per-token scale pages and are widened in-register
+    before the MXU.
     """
     if quant:
         ks_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr = rest
@@ -141,7 +144,7 @@ def _paged_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, *rest,
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    q = q_ref[0].astype(jnp.float32)  # (1, D)
+    q = q_ref[0, 0].astype(jnp.float32)  # (sq, D)
     k = k_ref[0, :, 0].astype(jnp.float32)  # (page, D)
     v = v_ref[0, :, 0].astype(jnp.float32)
     if quant:
@@ -153,17 +156,23 @@ def _paged_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, *rest,
     if cap:
         s = jnp.tanh(s / cap) * cap
 
-    # li: logical index into the gathered sequence this page covers
-    li = j * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+    # li: logical index into the gathered sequence this page covers;
+    # qi: query row index (query i's absolute position is right-aligned)
+    li = j * page + jax.lax.broadcasted_iota(jnp.int32, (sq, page), 1)
+    qi = jax.lax.broadcasted_iota(jnp.int32, (sq, page), 0)
     if window is None:
-        valid = li < len_ref[b]  # per-row valid prefix
+        qpos = len_ref[b] - sq + qi  # per-query valid prefix: li <= qpos
+        valid = li <= qpos
     else:
         # ring layout in the first `ring` logical slots: slot li holds the
-        # latest position p <= wp with p % ring == li; ring <= window, so
-        # p >= 0 already implies wp - p < window
+        # latest position p <= wp_last with p % ring == li; the causal
+        # bound p <= qpos hides the later queries' overwrites from the
+        # earlier queries, and ring <= window makes the window bound
+        # automatic (qpos - p < ring whenever p <= qpos)
         wp = len_ref[b]
         p = wp - ((wp - li) % ring)
-        valid = (li < ring) & (p >= 0)
+        qpos = wp - (sq - 1) + qi
+        valid = (li < ring) & (p >= 0) & (p <= qpos)
     s = jnp.where(valid, s, NEG_INF)
 
     m_prev = m_scr[...]
@@ -179,7 +188,7 @@ def _paged_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, *rest,
     def _finish():
         l = l_scr[...]
         safe = jnp.where(l > 0, l, 1.0)
-        o_ref[0] = (acc_scr[...] / safe[:, None]).astype(o_ref.dtype)
+        o_ref[0, 0] = (acc_scr[...] / safe[:, None]).astype(o_ref.dtype)
 
 
 def paged_attention_tpu(q, k_pool, v_pool, tables, kv_lens, *,
@@ -187,13 +196,18 @@ def paged_attention_tpu(q, k_pool, v_pool, tables, kv_lens, *,
                         scale: Optional[float] = None, cap: float = 0.0,
                         k_scales=None, v_scales=None,
                         interpret: bool = True):
-    """Paged decode attention. q: (B, H, D) - one token per sequence;
-    k_pool/v_pool: (num_blocks, page, KH, D) block pools (int8 when
-    k_scales/v_scales (num_blocks, page, KH, 1) are given); tables:
-    (B, nbt) int32 physical block ids; kv_lens: (B,) int32 valid length
-    (linear) or current write position (windowed). Forward only - the
+    """Paged decode attention. q: (B, H, D) - one token per sequence - or
+    (B, H, Sq, D) for a speculative multi-token verify (right-aligned
+    queries, per-query causal masks); k_pool/v_pool: (num_blocks, page,
+    KH, D) block pools (int8 when k_scales/v_scales (num_blocks, page,
+    KH, 1) are given); tables: (B, nbt) int32 physical block ids;
+    kv_lens: (B,) int32 valid length through the last query (linear) or
+    the last query's write position (windowed). Forward only - the
     decode path never differentiates."""
-    B, H, D = q.shape
+    squeeze = q.ndim == 3
+    if squeeze:
+        q = q[:, :, None]  # one query: (B, H, 1, D)
+    B, H, sq, D = q.shape
     KH, page = k_pool.shape[2], k_pool.shape[1]
     nbt = tables.shape[1]
     G = H // KH
@@ -204,14 +218,14 @@ def paged_attention_tpu(q, k_pool, v_pool, tables, kv_lens, *,
 
     kern = functools.partial(
         _paged_kernel, scale=float(scale), cap=float(cap), window=window,
-        page=page, nbt=nbt, ring=ring, quant=quant)
+        page=page, nbt=nbt, ring=ring, sq=sq, quant=quant)
 
     kv_spec = pl.BlockSpec(
         (1, page, 1, D), lambda b, h, j, tbl, kl: (tbl[b, j], 0, h // G, 0))
     sc_spec = pl.BlockSpec(
         (1, page, 1, 1), lambda b, h, j, tbl, kl: (tbl[b, j], 0, h // G, 0))
     in_specs = [
-        pl.BlockSpec((1, 1, D), lambda b, h, j, tbl, kl: (b, h, 0)),
+        pl.BlockSpec((1, 1, sq, D), lambda b, h, j, tbl, kl: (b, h, 0, 0)),
         kv_spec, kv_spec,
     ]
     args = [tables.astype(jnp.int32), kv_lens.astype(jnp.int32),
@@ -224,16 +238,18 @@ def paged_attention_tpu(q, k_pool, v_pool, tables, kv_lens, *,
         num_scalar_prefetch=2,
         grid=(B, H, nbt),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, 1, D), lambda b, h, j, tbl, kl: (b, h, 0)),
+        out_specs=pl.BlockSpec((1, 1, sq, D),
+                               lambda b, h, j, tbl, kl: (b, h, 0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((1,), jnp.float32),
-            pltpu.VMEM((1,), jnp.float32),
-            pltpu.VMEM((1, D), jnp.float32),
+            pltpu.VMEM((sq,), jnp.float32),
+            pltpu.VMEM((sq,), jnp.float32),
+            pltpu.VMEM((sq, D), jnp.float32),
         ],
     )
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kern,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, H, D), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((B, H, sq, D), jnp.float32),
         interpret=interpret,
     )(*args)
+    return out[:, :, 0] if squeeze else out

@@ -71,11 +71,13 @@ def paged_attention(q, k_pool, v_pool, tables, kv_lens,
                     k_scales=None, v_scales=None, impl: str = "auto"):
     """Decode attention straight out of a paged block pool.
 
-    q: (B, H, D); k_pool/v_pool: (num_blocks, page, KH, D) (int8 when
-    k_scales/v_scales are given); tables: (B, nbt) block ids; kv_lens:
-    (B,) valid length (linear) / write position (windowed). The Pallas
-    path consumes the table via scalar prefetch - BlockSpec index maps
-    DMA exactly the pages the table names, no gathered copy of the
+    q: (B, H, D), or (B, H, Sq, D) for a speculative multi-token verify
+    (right-aligned queries with per-query causal masks); k_pool/v_pool:
+    (num_blocks, page, KH, D) (int8 when k_scales/v_scales are given);
+    tables: (B, nbt) block ids; kv_lens: (B,) valid length through the
+    last query (linear) / last query's write position (windowed). The
+    Pallas path consumes the table via scalar prefetch - BlockSpec index
+    maps DMA exactly the pages the table names, no gathered copy of the
     sequence ever exists in HBM."""
     impl = _resolve(impl)
     if impl == "jnp":

@@ -102,14 +102,21 @@ def paged_attention_ref(q, k_pool, v_pool, tables, kv_lens, *,
                         k_scales=None, v_scales=None):
     """Dense oracle for paged decode attention.
 
-    q: (B, H, D) - one query token per sequence; k_pool/v_pool:
-    (num_blocks, page, KH, D) block pools (int8 with per-token k_scales/
-    v_scales (num_blocks, page, KH, 1)); tables: (B, nbt) physical block
-    ids; kv_lens: (B,) valid length (linear) or current write position
-    (windowed - validity is then purely positional over the ring layout).
-    Returns (B, H, D) fp32.
+    q: (B, H, D) - one query token per sequence - or (B, H, Sq, D) for a
+    speculative multi-token verify (queries are the LAST Sq positions,
+    right-aligned); k_pool/v_pool: (num_blocks, page, KH, D) block pools
+    (int8 with per-token k_scales/v_scales (num_blocks, page, KH, 1));
+    tables: (B, nbt) physical block ids; kv_lens: (B,) valid length
+    through the last query (linear) or the LAST query's write position
+    (windowed - validity is then positional over the ring layout, with a
+    causal bound so earlier queries never see the later queries' writes).
+    Returns fp32 of q's shape.
     """
-    B, H, D = q.shape
+    sq = None
+    if q.ndim == 4:
+        B, H, sq, D = q.shape
+    else:
+        B, H, D = q.shape
     page, KH = k_pool.shape[1], k_pool.shape[2]
     nbt = tables.shape[1]
     size = nbt * page
@@ -127,20 +134,46 @@ def paged_attention_ref(q, k_pool, v_pool, tables, kv_lens, *,
     k = jnp.repeat(k, G, axis=2)  # (B, size, H, D)
     v = jnp.repeat(v, G, axis=2)
 
-    s = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32), k) * scale
+    if sq is None:
+        s = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32), k) * scale
+        if cap:
+            s = jnp.tanh(s / cap) * cap
+        li = jnp.arange(size)[None, :]  # logical gathered index
+        if window is None:
+            valid = li < kv_lens[:, None]
+        else:
+            ring = min(window, size)
+            wp = kv_lens[:, None]
+            p = wp - ((wp - li) % ring)
+            valid = (li < ring) & (p >= 0)
+        s = jnp.where(valid[:, None, :], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhk,bkhd->bhd", p, v)
+
+    # multi-query verify: query i sits at absolute/write position
+    # qpos[i] = kv_lens - Sq + i (linear: kv_lens counts through the last
+    # query) / kv_lens - (Sq-1) + i (windowed: kv_lens IS the last write)
+    s = jnp.einsum("bhqd,bkhd->bhqk", q.astype(jnp.float32), k) * scale
     if cap:
         s = jnp.tanh(s / cap) * cap
-    li = jnp.arange(size)[None, :]  # logical gathered index
+    li = jnp.arange(size)[None, None, :]  # (1, 1, size)
+    qi = jnp.arange(sq)[None, :]  # (1, Sq)
     if window is None:
-        valid = li < kv_lens[:, None]
+        qpos = kv_lens[:, None] - sq + qi  # (B, Sq)
+        valid = li <= qpos[..., None]
     else:
+        # ring slot li holds the latest position p <= wp_last with
+        # p % ring == li; earlier queries must ALSO causally exclude the
+        # slots the later queries just overwrote (p <= qpos). The window
+        # bound is then automatic: qpos_i - p < ring <= window.
         ring = min(window, size)
-        wp = kv_lens[:, None]
-        p = wp - ((wp - li) % ring)
-        valid = (li < ring) & (p >= 0)
-    s = jnp.where(valid[:, None, :], s, -1e30)
+        wp_last = kv_lens[:, None, None]  # (B, 1, 1)
+        p = wp_last - ((wp_last - li) % ring)
+        qpos = kv_lens[:, None] - (sq - 1) + qi  # (B, Sq)
+        valid = (li < ring) & (p >= 0) & (p <= qpos[..., None])
+    s = jnp.where(valid[:, None], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
-    return jnp.einsum("bhk,bkhd->bhd", p, v)
+    return jnp.einsum("bhqk,bkhd->bhqd", p, v)
 
 
 # --- rwkv6 wkv ---------------------------------------------------------------

@@ -18,8 +18,18 @@ the engine or retracing the decode tick:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
       --requests 12 --tasks 6 --bank-size 2 --adapter-dir /tmp/adapters
 
-`--static` falls back to the lock-step ServeEngine.generate batch (the
-pre-scheduler path, kept for A/B comparison).
+Speculative decoding (`--spec-k`): draft k tokens per tick with the
+adapter-free backbone and verify them in one forward - greedy output is
+token-identical, ticks shrink by the acceptance rate:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
+      --requests 8 --num-slots 4 --spec-k 4 --tasks 3
+
+All serving knobs funnel into one validated `ServingConfig`; the
+scheduler (contiguous / paged / speculative) is selected by
+`serving.make_scheduler`. `--static` falls back to the lock-step
+ServeEngine.generate batch (the pre-scheduler path, kept for A/B
+comparison).
 """
 from __future__ import annotations
 
@@ -35,9 +45,9 @@ from repro.core.hadamard import extract_delta, perturb_adapters
 from repro.dist.api import use_mesh
 from repro.launch.mesh import parse_mesh
 from repro.models import model as M
-from repro.serving.engine import MultiTaskEngine, ServeEngine
-from repro.serving.registry import AdapterBank, AdapterRegistry
-from repro.serving.scheduler import Request, Scheduler
+from repro.serving import (AdapterBank, AdapterRegistry, MultiTaskEngine,
+                           Request, Scheduler, ServeEngine, ServingConfig,
+                           make_scheduler)
 
 
 def build_params(key, cfg, tasks: int, share_w: bool = False):
@@ -66,68 +76,89 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--requests", type=int, default=8,
-                    help="number of requests to serve")
-    ap.add_argument("--num-slots", type=int, default=4,
-                    help="KV-cache slots (max concurrent requests)")
-    ap.add_argument("--prompt-len", type=int, default=16,
-                    help="max prompt length (requests are staggered below it)")
-    ap.add_argument("--new-tokens", type=int, default=8,
-                    help="max generation budget per request")
-    ap.add_argument("--tasks", type=int, default=0,
-                    help=">0: multi-task adapter bank serving")
-    ap.add_argument("--adapter-dir", default="",
-                    help="hot-swap serving: publish/load per-task deltas "
-                         "through an AdapterRegistry at this path; requests "
-                         "carry adapter NAMES resolved at admission")
-    ap.add_argument("--bank-size", type=int, default=4,
-                    help="device-resident adapter rows for --adapter-dir "
-                         "(misses load from disk, cold rows are evicted LRU)")
-    ap.add_argument("--prune-to", type=int, default=0,
-                    help="repro.sparse: prune every tenant's adapter to its "
-                         "top-K layers and publish PACKED deltas (bitmask + "
-                         "active rows; pruned layers serve as identity). "
-                         "0 = dense; the paper's 0.022%% preset is K = 2L/3")
-    ap.add_argument("--share-w", action="store_true",
-                    help="repro.sparse shared-w serving (paper Fig 5: w is "
-                         "task-invariant): the bank stores ONE shared w "
-                         "row-set and per-tenant inserts scatter only b - "
-                         "T tenants cost (T+1) row-sets instead of 2T. "
-                         "Requires --adapter-dir")
-    ap.add_argument("--page-size", type=int, default=0,
-                    help=">0: paged KV serving (serving/paged.py) - block-"
-                         "table cache with this many tokens per page, "
-                         "copy-on-write prefix sharing and admission gated "
-                         "on free blocks instead of whole slots")
-    ap.add_argument("--kv-blocks", type=int, default=0,
-                    help="physical blocks in the paged pool (0 = size for "
-                         "num_slots worst-case requests plus 50%% headroom)")
-    ap.add_argument("--prefix-cache", dest="prefix_cache",
-                    action="store_true", default=True,
-                    help="share identical prompt prefixes across requests "
-                         "(default on; paged mode only)")
-    ap.add_argument("--no-prefix-cache", dest="prefix_cache",
-                    action="store_false")
-    ap.add_argument("--kv-quant", default="", choices=["", "int8", "fp8"],
-                    help="store paged KV blocks quantized with per-token "
-                         "scales (4x smaller than fp32; dequantized at the "
-                         "attention gather)")
-    ap.add_argument("--top-k", type=int, default=0,
-                    help=">0: per-request top-k sampling (greedy otherwise)")
-    ap.add_argument("--stream", action="store_true",
-                    help="print every token the moment it is sampled")
-    ap.add_argument("--static", action="store_true",
-                    help="lock-step ServeEngine.generate batch instead of "
-                         "the continuous-batching scheduler")
-    ap.add_argument("--fold", action="store_true",
-                    help="fold the adapter into W_O (zero-overhead serving)")
-    ap.add_argument("--quant", default="", choices=["", "int8", "fp8"],
-                    help="quantize the frozen backbone's matmul weights at "
-                         "placement (adapter rows and norms stay fp32)")
-    ap.add_argument("--mesh", default="",
-                    help="'DATAxMODEL' (e.g. 2x4): serve the backbone "
-                         "sharded over a host mesh")
     ap.add_argument("--seed", type=int, default=0)
+
+    g = ap.add_argument_group("workload")
+    g.add_argument("--requests", type=int, default=8,
+                   help="number of requests to serve")
+    g.add_argument("--prompt-len", type=int, default=16,
+                   help="max prompt length (requests are staggered below it)")
+    g.add_argument("--new-tokens", type=int, default=8,
+                   help="max generation budget per request")
+    g.add_argument("--static", action="store_true",
+                   help="lock-step ServeEngine.generate batch instead of "
+                        "the continuous-batching scheduler")
+
+    g = ap.add_argument_group("capacity (ServingConfig)")
+    g.add_argument("--num-slots", type=int, default=4,
+                   help="KV-cache slots (max concurrent requests)")
+
+    g = ap.add_argument_group("paged KV (ServingConfig)")
+    g.add_argument("--page-size", type=int, default=0,
+                   help=">0: paged KV serving (serving/paged.py) - block-"
+                        "table cache with this many tokens per page, "
+                        "copy-on-write prefix sharing and admission gated "
+                        "on free blocks instead of whole slots")
+    g.add_argument("--kv-blocks", type=int, default=0,
+                   help="physical blocks in the paged pool (0 = size for "
+                        "num_slots worst-case requests plus 50%% headroom)")
+    g.add_argument("--prefix-cache", dest="prefix_cache",
+                   action="store_true", default=True,
+                   help="share identical prompt prefixes across requests "
+                        "(default on; paged mode only)")
+    g.add_argument("--no-prefix-cache", dest="prefix_cache",
+                   action="store_false")
+    g.add_argument("--kv-quant", default="", choices=["", "int8", "fp8"],
+                   help="store paged KV blocks quantized with per-token "
+                        "scales (4x smaller than fp32; dequantized at the "
+                        "attention gather)")
+
+    g = ap.add_argument_group("speculation (ServingConfig)")
+    g.add_argument("--spec-k", type=int, default=0,
+                   help=">0: speculative decoding - draft this many tokens "
+                        "per tick and verify them in one target forward "
+                        "(greedy output stays token-identical)")
+    g.add_argument("--spec-draft", default="self", choices=["self", "model"],
+                   help="draft source: 'self' drafts with the adapter-free "
+                        "frozen backbone (identity Hadamard rows, no extra "
+                        "weights); 'model' drafts with a separate model "
+                        "(here: the untuned base checkpoint)")
+
+    g = ap.add_argument_group("adapters / tenants")
+    g.add_argument("--tasks", type=int, default=0,
+                   help=">0: multi-task adapter bank serving")
+    g.add_argument("--adapter-dir", default="",
+                   help="hot-swap serving: publish/load per-task deltas "
+                        "through an AdapterRegistry at this path; requests "
+                        "carry adapter NAMES resolved at admission")
+    g.add_argument("--bank-size", type=int, default=4,
+                   help="device-resident adapter rows for --adapter-dir "
+                        "(misses load from disk, cold rows are evicted LRU)")
+    g.add_argument("--prune-to", type=int, default=0,
+                   help="repro.sparse: prune every tenant's adapter to its "
+                        "top-K layers and publish PACKED deltas (bitmask + "
+                        "active rows; pruned layers serve as identity). "
+                        "0 = dense; the paper's 0.022%% preset is K = 2L/3")
+    g.add_argument("--share-w", action="store_true",
+                   help="repro.sparse shared-w serving (paper Fig 5: w is "
+                        "task-invariant): the bank stores ONE shared w "
+                        "row-set and per-tenant inserts scatter only b - "
+                        "T tenants cost (T+1) row-sets instead of 2T. "
+                        "Requires --adapter-dir")
+
+    g = ap.add_argument_group("engine / sampling")
+    g.add_argument("--top-k", type=int, default=0,
+                   help=">0: per-request top-k sampling (greedy otherwise)")
+    g.add_argument("--stream", action="store_true",
+                   help="print every token the moment it is sampled")
+    g.add_argument("--fold", action="store_true",
+                   help="fold the adapter into W_O (zero-overhead serving)")
+    g.add_argument("--quant", default="", choices=["", "int8", "fp8"],
+                   help="quantize the frozen backbone's matmul weights at "
+                        "placement (adapter rows and norms stay fp32)")
+    g.add_argument("--mesh", default="",
+                   help="'DATAxMODEL' (e.g. 2x4): serve the backbone "
+                        "sharded over a host mesh")
     args = ap.parse_args()
 
     mesh = parse_mesh(args.mesh)
@@ -215,11 +246,12 @@ def main():
             key, (n, args.prompt_len), 10, cfg.vocab_size))
         t0 = time.perf_counter()
         if variants is not None:
-            task_ids = np.arange(n) % args.tasks
-            out = engine.generate_for_tasks(
-                tokens, task_ids, args.new_tokens,
+            reqs = [Request(prompt=tokens[i], max_new_tokens=args.new_tokens,
+                            task_id=int(i % args.tasks)) for i in range(n)]
+            out = np.stack(engine.generate(
+                reqs,
                 rng=jax.random.PRNGKey(args.seed) if args.top_k else None,
-                top_k=args.top_k)
+                top_k=args.top_k))
         else:
             out = engine.generate(
                 tokens, args.new_tokens,
@@ -258,32 +290,36 @@ def main():
 
     # bucket prompt lengths where the config allows it so the staggered
     # request stream doesn't compile one prefill per distinct length
-    max_len = args.prompt_len + args.new_tokens
+    max_len = args.prompt_len + args.new_tokens + args.spec_k
     bucket = 8 if Scheduler.supports_bucketing(cfg) else None
-    if args.page_size > 0:
-        from repro.serving.paged import PagedScheduler
-
-        page = args.page_size
-        max_len = -(-max_len // page) * page  # page-aligned cache budget
-        nb_worst = max_len // page
-        num_blocks = args.kv_blocks or 1 + args.num_slots * nb_worst * 3 // 2
-        if bucket is not None and bucket % page:
-            bucket = page * (-(-bucket // page))
-        sched = PagedScheduler(
-            engine, num_slots=args.num_slots, num_blocks=num_blocks,
-            page=page, max_len=max_len, kv_quant=args.kv_quant or None,
-            prefix_cache=args.prefix_cache, stream=stream,
-            prefill_bucket=bucket)
-        print(f"paged KV: {num_blocks - 1} x {page}-token blocks"
+    paged = args.page_size > 0
+    if paged:
+        max_len = -(-max_len // args.page_size) * args.page_size
+        if bucket is not None and bucket % args.page_size:
+            bucket = args.page_size * (-(-bucket // args.page_size))
+    draft_model = None
+    if args.spec_k and args.spec_draft == "model":
+        draft_model = (cfg, base)  # the untuned base checkpoint drafts
+    try:
+        serve_cfg = ServingConfig(
+            num_slots=args.num_slots, max_len=max_len, paged=paged,
+            page_size=args.page_size if paged else 16,
+            num_blocks=(args.kv_blocks or None) if paged else None,
+            prefix_cache=args.prefix_cache, kv_quant=args.kv_quant or None,
+            spec_k=args.spec_k, spec_draft=args.spec_draft,
+            backbone_quant=quant, prefill_bucket=bucket, top_k=args.top_k,
+            stream=stream)
+        sched = make_scheduler(engine, serve_cfg, draft_model=draft_model)
+    except ValueError as e:
+        raise SystemExit(str(e))
+    if paged:
+        print(f"paged KV: {sched.alloc.num_blocks - 1} x "
+              f"{args.page_size}-token blocks"
               + (f", {args.kv_quant} blocks" if args.kv_quant else "")
               + ("" if args.prefix_cache else ", prefix cache off"))
-    else:
-        if args.kv_quant:
-            raise SystemExit("--kv-quant requires paged serving "
-                             "(pass --page-size)")
-        sched = Scheduler(
-            engine, num_slots=args.num_slots, max_len=max_len, stream=stream,
-            prefill_bucket=bucket)
+    if args.spec_k:
+        print(f"speculative decoding: k={args.spec_k}, "
+              f"draft={args.spec_draft}")
 
     if registry is not None and args.tasks > 1:
         # multi-tenant lifecycle: the LAST task's tenant shows up only
@@ -339,6 +375,11 @@ def main():
           f"{report['tokens_per_s']:.1f} tok/s; "
           f"mean ttft {report['mean_ttft_s'] * 1e3:.0f}ms, "
           f"mean latency {report['mean_latency_s'] * 1e3:.0f}ms")
+    if args.spec_k:
+        st = sched.spec_stats
+        print(f"speculation: {st['accepted']}/{st['drafted']} drafts "
+              f"accepted ({sched.acceptance_rate:.0%}) over "
+              f"{st['spec_ticks']} verify ticks")
     if args.page_size > 0:
         pr = sched.pool_report()
         print(f"pool: {pr['live_blocks']}/{pr['num_blocks']} blocks live, "

@@ -109,7 +109,7 @@ def apply_attn(
     kv_x=None,  # cross-attention source (B, S_enc, d)
     cache=None,  # decode (or cross-decode) cache for this slot
     cache_len: Optional[int] = None,  # prefill: build a cache of this size
-    write_pos=None,  # decode: scalar absolute position of the new token
+    write_pos=None,  # decode: scalar / (B,) / (B, S) absolute write positions
     adapter=None,
     adapter_cfg: Optional[AdapterCfg] = None,
     block_tables=None,  # paged decode/extend: (B, nbt) physical block ids
@@ -200,14 +200,20 @@ def apply_attn(
         if slot.window is None:
             li = wp2
             kv_pos = jnp.arange(size)
-            eff_len = paged_kv_len if paged_kv_len is not None else wp + 1
+            if paged_kv_len is not None:
+                eff_len = paged_kv_len
+            else:
+                # (B, S) write_pos is a speculative verify: the valid
+                # length runs to the LAST write, per-query causal masking
+                # hides the later writes from the earlier queries
+                eff_len = (wp[:, -1] if wp.ndim == 2 else wp) + 1
         else:
             # ring layout inside the first ring//page table entries; the
             # gathered tail beyond the ring carries INVALID_POS so validity
             # is entirely positional (scheduler guarantees page | ring)
             ring = min(slot.window, size)
             li = wp2 % ring
-            rp = ring_positions(ring, wp)  # wp is (B,): decode only
+            rp = ring_positions(ring, wp[:, -1] if wp.ndim == 2 else wp)
             kv_pos = jnp.concatenate(
                 [rp, jnp.full((B, size - ring), INVALID_POS, jnp.int32)],
                 axis=1) if size > ring else rp
@@ -235,7 +241,11 @@ def apply_attn(
         size = cache["k"].shape[1]
         wp = jnp.asarray(write_pos, jnp.int32)
         slot_idx = wp % size
-        if wp.ndim:  # (B,) per-row write positions (continuous batching)
+        if wp.ndim == 2:  # (B, S) per-row-per-token: speculative verify
+            bidx = jnp.arange(B)[:, None]
+            ck = cache["k"].at[bidx, slot_idx].set(k.astype(cache["k"].dtype))
+            cv = cache["v"].at[bidx, slot_idx].set(v.astype(cache["v"].dtype))
+        elif wp.ndim:  # (B,) per-row write positions (continuous batching)
             bidx = jnp.arange(B)
             ck = cache["k"].at[bidx, slot_idx].set(k[:, 0].astype(cache["k"].dtype))
             cv = cache["v"].at[bidx, slot_idx].set(v[:, 0].astype(cache["v"].dtype))
@@ -245,11 +255,12 @@ def apply_attn(
             cv = jax.lax.dynamic_update_slice_in_dim(
                 cache["v"], v.astype(cache["v"].dtype), slot_idx, axis=1)
         new_cache = {"k": ck, "v": cv}
+        last = wp[:, -1] if wp.ndim == 2 else wp  # last write per row
         if slot.window is None:
             kv_pos = jnp.arange(size)
-            eff_len = wp + 1  # scalar, or (B,) per-row valid lengths
+            eff_len = last + 1  # scalar, or (B,) per-row valid lengths
         else:
-            kv_pos = ring_positions(size, wp)
+            kv_pos = ring_positions(size, last)
             eff_len = INVALID_POS  # validity entirely via positions
         k_att, v_att = ck, cv
     elif cache_len is not None:  # self-attn prefill: build the cache

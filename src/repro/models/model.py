@@ -200,6 +200,32 @@ def decode_lm(params, cfg: ModelCfg, caches, token, pos):
     return lm_logits(params, cfg, x), caches
 
 
+def verify_lm(params, cfg: ModelCfg, caches, tokens, pos):
+    """Speculative-decoding verify: score S = k+1 tokens per row in ONE
+    decode-mode forward. tokens: (B, S) int32 = [last accepted token,
+    k draft tokens]; pos: (B,) absolute position of tokens[:, 0].
+
+    Writes K/V at positions pos+j for every j (per-row multi-position
+    scatter), overwriting any stale rejected-draft entries left by the
+    previous tick - the scheduler guarantees the new write range covers
+    them, and per-query causal masking hides positions > pos+j from
+    query j inside this forward. Returns logits for ALL S positions:
+    logits[:, j] is the target distribution for position pos+j+1 given
+    tokens[:, :j+1], so greedy argmax over column j reproduces plain
+    one-token decode exactly (the acceptance rule's token-identity
+    guarantee). Full-attention slots only: a ring window evicts entries
+    the earlier queries still need (the scheduler validates)."""
+    pos = jnp.asarray(pos, jnp.int32)
+    S = tokens.shape[1]
+    qp = pos[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]  # (B, S)
+    x = embed_tokens(params, cfg, tokens)
+    x, caches, _ = _run_groups(params, cfg, cfg.groups, "blocks", x,
+                               q_pos=qp, causal=True, mode="decode",
+                               caches=caches, write_pos=qp)
+    x = apply_norm(params["final_norm"], cfg, x)
+    return lm_logits(params, cfg, x), caches
+
+
 def init_decode_caches(cfg: ModelCfg, batch: int, cache_len: int):
     return {
         f"g{i}": group_cache_init(cfg, g, batch, cache_len)
@@ -236,6 +262,25 @@ def decode_lm_paged(params, cfg: ModelCfg, pool, token, pos, block_tables):
     x, pool, _ = _run_groups(params, cfg, cfg.groups, "blocks", x,
                              q_pos=q_pos, causal=True, mode="decode",
                              caches=pool, write_pos=pos,
+                             block_tables=block_tables)
+    x = apply_norm(params["final_norm"], cfg, x)
+    return lm_logits(params, cfg, x), pool
+
+
+def verify_lm_paged(params, cfg: ModelCfg, pool, tokens, pos, block_tables):
+    """`verify_lm` against the paged block pool: K/V for the k+1 scored
+    positions land in the pool blocks the table maps pos+j to (the
+    scheduler pre-allocates every page the write range touches), and the
+    gathered view masks by the LAST write's valid length with per-query
+    causal masking below it - same rollback-by-overwrite contract as the
+    contiguous path."""
+    pos = jnp.asarray(pos, jnp.int32)
+    S = tokens.shape[1]
+    qp = pos[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]  # (B, S)
+    x = embed_tokens(params, cfg, tokens)
+    x, pool, _ = _run_groups(params, cfg, cfg.groups, "blocks", x,
+                             q_pos=qp, causal=True, mode="decode",
+                             caches=pool, write_pos=qp,
                              block_tables=block_tables)
     x = apply_norm(params["final_norm"], cfg, x)
     return lm_logits(params, cfg, x), pool

@@ -1,0 +1,22 @@
+"""Serving API.
+
+The supported entry points are `ServeEngine`/`MultiTaskEngine` (engine
+construction), `ServingConfig` + `make_scheduler` (scheduler
+construction: continuous batching, paged KV, speculation - one validated
+config instead of four constructors), and `Request`/`Completion` (the
+request surface). Scheduler classes stay importable for typing and
+subclassing; construct them through the factory.
+"""
+from repro.serving.config import ServingConfig, make_scheduler
+from repro.serving.engine import MultiTaskEngine, ServeEngine
+from repro.serving.paged import BlockPoolFullError, PagedScheduler
+from repro.serving.registry import AdapterBank, AdapterRegistry, BankFullError
+from repro.serving.scheduler import Completion, Request, Scheduler
+from repro.serving.spec import DraftLane, SpecPagedScheduler, SpecScheduler
+
+__all__ = [
+    "AdapterBank", "AdapterRegistry", "BankFullError", "BlockPoolFullError",
+    "Completion", "DraftLane", "MultiTaskEngine", "PagedScheduler",
+    "Request", "Scheduler", "ServeEngine", "ServingConfig",
+    "SpecPagedScheduler", "SpecScheduler", "make_scheduler",
+]

@@ -14,6 +14,7 @@ serves all tasks. Without a mesh everything stays single-device.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Optional
 
 import jax
@@ -87,6 +88,18 @@ class ServeEngine:
                 p, cfg, pool, toks, tbl, start, kvl, lp),
             donate_argnums=(1,),
         )
+        # -- speculative verify: score k+1 tokens per row in ONE forward
+        # (serving/spec.py). Same donation discipline as decode.
+        self._verify = jax.jit(
+            lambda p, caches, toks, pos: M.verify_lm(p, cfg, caches, toks,
+                                                     pos),
+            donate_argnums=(1,),
+        )
+        self._verify_paged = jax.jit(
+            lambda p, pool, toks, pos, tbl: M.verify_lm_paged(
+                p, cfg, pool, toks, pos, tbl),
+            donate_argnums=(1,),
+        )
         self._paged_insert_jit = jax.jit(self._paged_insert_impl,
                                          donate_argnums=(0,))
         self._copy_block_jit = jax.jit(self._copy_block_impl,
@@ -125,6 +138,17 @@ class ServeEngine:
         per-row positions (the scheduler's per-slot tick)."""
         with self._mesh_ctx():
             return self._decode(self.params, caches, tok, pos)
+
+    def verify_step(self, caches, toks, pos, task_ids=None):
+        """Speculative verify: score toks (B, k+1) = [last accepted token,
+        k draft tokens] per row in ONE decode-mode forward, writing all
+        k+1 cache positions. pos: (B,) absolute position of toks[:, 0].
+        Rejected draft writes are stale-but-harmless: the next tick's
+        write range starts at the first rejected position and overwrites
+        them before any mask admits them (see models.model.verify_lm)."""
+        with self._mesh_ctx():
+            return self._verify(self.params, caches, jnp.asarray(toks),
+                                jnp.asarray(pos, jnp.int32))
 
     def init_slot_caches(self, num_slots: int, cache_len: int):
         """Zeroed slot-pool caches: row i is slot i's private cache region.
@@ -209,6 +233,17 @@ class ServeEngine:
             return self._decode_paged(self.params, pool, tok, pos,
                                       jnp.asarray(tables))
 
+    def paged_verify_step(self, pool, toks, pos, tables, task_ids=None):
+        """Speculative verify against the block pool: toks (B, k+1), pos
+        (B,) absolute position of toks[:, 0]. All k+1 positions are
+        written into each row's pages (the spec scheduler pre-allocates
+        every page the write range can touch); masks are per-query causal
+        so earlier queries never see later draft writes."""
+        with self._mesh_ctx():
+            return self._verify_paged(self.params, pool, jnp.asarray(toks),
+                                      jnp.asarray(pos, jnp.int32),
+                                      jnp.asarray(tables))
+
     def paged_extend(self, pool, tokens, tables, start, kv_len, last_pos,
                      task_ids=None):
         """Prefill a prompt suffix directly into pool blocks (prefix-cache
@@ -230,8 +265,89 @@ class ServeEngine:
             return sample_topk(logits, sub, k=top_k), rng
         return sample_greedy(logits), rng
 
-    def generate(self, tokens: np.ndarray, max_new_tokens: int,
+    def generate(self, requests, max_new_tokens: Optional[int] = None,
                  rng: Optional[jax.Array] = None, top_k: int = 0):
+        """Unified generation entry point.
+
+        Two input forms:
+          * an int array (B, S) of same-length prompts + `max_new_tokens`:
+            the classic lock-step batch. Returns (B, max_new_tokens) - one
+            row per prompt, every row decoded to the full budget.
+          * a list of `serving.Request`s (same-length prompts): per-request
+            budgets, sampling params (top_k/temperature/seed) and - on
+            MultiTaskEngine - task_id/adapter are honoured. Returns a list
+            of per-request token arrays, each truncated at its own
+            max_new_tokens and (when eos_id is set) at the first EOS
+            (inclusive). A call-level `rng` switches the whole batch to
+            call-level sampling (`top_k` applies to every row) - the
+            legacy shims delegate through this path for exact parity.
+
+        Mixed prompt lengths / streaming / continuous arrival belong to
+        the schedulers: `serving.make_scheduler(engine, ServingConfig())`.
+        """
+        if not isinstance(requests, (list, tuple)):
+            if max_new_tokens is None:
+                raise ValueError("array input requires max_new_tokens")
+            return self._lockstep(np.asarray(requests), int(max_new_tokens),
+                                  rng, top_k)
+        reqs = list(requests)
+        if not reqs:
+            return []
+        prompts = [np.asarray(r.prompt, np.int32).reshape(-1) for r in reqs]
+        if len({p.shape[0] for p in prompts}) != 1:
+            raise ValueError(
+                "generate(list[Request]) batches lock-step and needs "
+                "same-length prompts; use serving.make_scheduler for "
+                "heterogeneous lengths")
+        tokens = np.stack(prompts)
+        budget = max(r.max_new_tokens for r in reqs)
+        if max_new_tokens is not None:
+            budget = min(budget, int(max_new_tokens))
+        return self._generate_rows(tokens, reqs, budget, rng, top_k)
+
+    def _generate_rows(self, tokens, reqs, budget, rng, top_k):
+        """Request-list path. The base engine has a single param tree, so
+        per-request adapters are a MultiTaskEngine feature (override)."""
+        if any(r.task_id or r.adapter is not None for r in reqs):
+            raise ValueError(
+                "per-request task_id/adapter requires a MultiTaskEngine")
+        return self._decode_rows(tokens, reqs, budget, rng, top_k)
+
+    def _decode_rows(self, tokens, reqs, budget, rng, top_k):
+        """Lock-step decode with per-request sampling + truncation."""
+        if rng is not None:  # call-level sampling (legacy-shim parity)
+            out = self._lockstep(tokens, budget, rng, top_k)
+            return self._truncate(out, reqs)
+        keys = [jax.random.PRNGKey(r.seed if r.seed is not None else i)
+                if r.top_k else None for i, r in enumerate(reqs)]
+
+        def pick(logits):
+            toks = np.asarray(sample_greedy(logits))
+            for i, r in enumerate(reqs):
+                if r.top_k:  # per-row rng stream, scheduler-compatible
+                    keys[i], sub = jax.random.split(keys[i])
+                    toks[i] = int(sample_topk(logits[i:i + 1], sub,
+                                              k=r.top_k,
+                                              temperature=r.temperature)[0])
+            return jnp.asarray(toks, jnp.int32)
+
+        out = self._lockstep(tokens, budget, None, 0, pick=pick)
+        return self._truncate(out, reqs)
+
+    @staticmethod
+    def _truncate(out, reqs):
+        res = []
+        for i, r in enumerate(reqs):
+            row = np.asarray(out[i, :r.max_new_tokens])
+            if r.eos_id is not None:
+                hits = np.flatnonzero(row == r.eos_id)
+                if hits.size:
+                    row = row[:hits[0] + 1]
+            res.append(row)
+        return res
+
+    def _lockstep(self, tokens: np.ndarray, max_new_tokens: int,
+                  rng: Optional[jax.Array], top_k: int, pick=None):
         B, S = tokens.shape
         cache_len = S + max_new_tokens
         with self._mesh_ctx():
@@ -240,12 +356,18 @@ class ServeEngine:
             out = []
             # the first post-prefill token goes through the same sampling
             # path as every later one (greedy only when sampling is off)
-            tok, rng = self._sample(logits, rng, top_k)
+            if pick is None:
+                tok, rng = self._sample(logits, rng, top_k)
+            else:
+                tok = pick(logits)
             for i in range(max_new_tokens):
                 out.append(tok)
                 logits, caches = self._decode(
                     self.params, caches, tok[:, None], jnp.int32(S + i))
-                tok, rng = self._sample(logits, rng, top_k)
+                if pick is None:
+                    tok, rng = self._sample(logits, rng, top_k)
+                else:
+                    tok = pick(logits)
         return np.stack([np.asarray(t) for t in out], axis=1)
 
 
@@ -288,7 +410,8 @@ class MultiTaskEngine(ServeEngine):
         # a fresh mix of task ids each tick re-gathers without re-placing
         # params (the gather is collective-free: adapters are replicated).
         # The python bodies bump trace_counts, making retraces observable.
-        self.trace_counts = {"prefill": 0, "decode": 0, "decode_paged": 0}
+        self.trace_counts = {"prefill": 0, "decode": 0, "decode_paged": 0,
+                             "verify": 0, "verify_paged": 0}
 
         def _pf(bank, toks, tids, cl, lp):
             self.trace_counts["prefill"] += 1
@@ -309,10 +432,22 @@ class MultiTaskEngine(ServeEngine):
             return M.extend_lm(select_tasks(bank, tids), cfg, pool, toks,
                                tbl, start, kvl, lp)
 
+        def _vf(bank, caches, toks, pos, tids):
+            self.trace_counts["verify"] += 1
+            return M.verify_lm(select_tasks(bank, tids), cfg, caches, toks,
+                               pos)
+
+        def _vfp(bank, pool, toks, pos, tbl, tids):
+            self.trace_counts["verify_paged"] += 1
+            return M.verify_lm_paged(select_tasks(bank, tids), cfg, pool,
+                                     toks, pos, tbl)
+
         self._prefill_tasks = jax.jit(_pf, static_argnums=(3,))
         self._decode_tasks = jax.jit(_dc, donate_argnums=(1,))
         self._decode_paged_tasks = jax.jit(_pdc, donate_argnums=(1,))
         self._extend_tasks = jax.jit(_pext, donate_argnums=(1,))
+        self._verify_tasks = jax.jit(_vf, donate_argnums=(1,))
+        self._verify_paged_tasks = jax.jit(_vfp, donate_argnums=(1,))
 
     @property
     def bank(self):
@@ -359,6 +494,25 @@ class MultiTaskEngine(ServeEngine):
             return self._decode_tasks(
                 self.bank, caches, tok, pos, jnp.asarray(task_ids, jnp.int32))
 
+    def verify_step(self, caches, toks, pos, task_ids=None):
+        if task_ids is None:
+            raise ValueError("MultiTaskEngine.verify_step requires task_ids")
+        with self._mesh_ctx():
+            return self._verify_tasks(
+                self.bank, caches, jnp.asarray(toks),
+                jnp.asarray(pos, jnp.int32),
+                jnp.asarray(task_ids, jnp.int32))
+
+    def paged_verify_step(self, pool, toks, pos, tables, task_ids=None):
+        if task_ids is None:
+            raise ValueError(
+                "MultiTaskEngine.paged_verify_step requires task_ids")
+        with self._mesh_ctx():
+            return self._verify_paged_tasks(
+                self.bank, pool, jnp.asarray(toks),
+                jnp.asarray(pos, jnp.int32), jnp.asarray(tables),
+                jnp.asarray(task_ids, jnp.int32))
+
     def paged_decode_step(self, pool, tok, pos, tables, task_ids=None):
         if task_ids is None:
             raise ValueError(
@@ -378,38 +532,74 @@ class MultiTaskEngine(ServeEngine):
                 jnp.int32(start), jnp.int32(kv_len), jnp.int32(last_pos),
                 jnp.asarray(task_ids, jnp.int32))
 
+    def _generate_rows(self, tokens, reqs, budget, rng, top_k):
+        """Request-list path with per-request adapters: resolve every name
+        to a bank row up front (pin unique names once, so no row displaces
+        another mid-batch), swap in the per-row selected params for the
+        lock-step run, release in finally - a mid-resolution BankFullError
+        or KeyError must not leak pins and wedge the bank."""
+        uniq = list(dict.fromkeys(
+            r.adapter for r in reqs if r.adapter is not None))
+        if uniq and self.adapter_bank is None:
+            raise ValueError(
+                "named-adapter requests need an AdapterBank "
+                "(MultiTaskEngine(cfg, AdapterBank(...)))")
+        acquired = []
+        try:
+            for n in uniq:
+                self.adapter_bank.acquire(n)
+                acquired.append(n)
+            rows = np.asarray(
+                [self.adapter_bank.row_of(r.adapter)
+                 if r.adapter is not None else r.task_id for r in reqs],
+                np.int32)
+            saved = self.params
+            self.params = select_tasks(self.bank, jnp.asarray(rows))
+            try:
+                return self._decode_rows(tokens, reqs, budget, rng, top_k)
+            finally:
+                self.params = saved
+        finally:
+            for n in acquired:
+                self.adapter_bank.release(n)
+
+    # -- deprecated entry points (use generate(list[Request])) --------------
+
     def generate_for_tasks(self, tokens: np.ndarray, task_ids: np.ndarray,
                            max_new_tokens: int,
                            rng: Optional[jax.Array] = None, top_k: int = 0):
-        params = select_tasks(self.bank, jnp.asarray(task_ids))
+        """Deprecated: `generate(list[Request])` with per-request task_id
+        subsumes this. Token-identical delegation (call-level rng keeps the
+        exact legacy sampling stream); returns the legacy stacked array."""
+        warnings.warn(
+            "generate_for_tasks is deprecated; use MultiTaskEngine."
+            "generate([Request(..., task_id=...)], ...) instead",
+            DeprecationWarning, stacklevel=2)
+        rows = np.asarray(task_ids, np.int32)
         saved = self.params
-        self.params = params
+        self.params = select_tasks(self.bank, jnp.asarray(rows))
         try:
-            return self.generate(tokens, max_new_tokens, rng=rng, top_k=top_k)
+            return self._lockstep(np.asarray(tokens), int(max_new_tokens),
+                                  rng, top_k)
         finally:
             self.params = saved
 
     def generate_for_adapters(self, tokens: np.ndarray, names,
                               max_new_tokens: int,
                               rng: Optional[jax.Array] = None, top_k: int = 0):
-        """Lock-step generation addressed by adapter *name*: resolve every
-        name to a bank row (loading/evicting as needed), then generate.
-        Resolution happens up front, so all rows are resident for the whole
-        batch - `len(set(names))` must fit the bank."""
+        """Deprecated: `generate(list[Request])` with per-request `adapter`
+        subsumes this (same pin-unique/release discipline)."""
+        warnings.warn(
+            "generate_for_adapters is deprecated; use MultiTaskEngine."
+            "generate([Request(..., adapter=...)], ...) instead",
+            DeprecationWarning, stacklevel=2)
         if self.adapter_bank is None:
             raise ValueError("generate_for_adapters needs an AdapterBank")
-        uniq = list(dict.fromkeys(names))
-        acquired = []
-        try:
-            for n in uniq:  # pin all, then unpin: no row displaces another
-                self.adapter_bank.acquire(n)
-                acquired.append(n)
-            rows = np.asarray([self.adapter_bank.row_of(n) for n in names],
-                              np.int32)
-            return self.generate_for_tasks(tokens, rows, max_new_tokens,
-                                           rng=rng, top_k=top_k)
-        finally:
-            # releases exactly what was pinned: a mid-loop BankFullError /
-            # KeyError must not leak pins and wedge the bank
-            for n in acquired:
-                self.adapter_bank.release(n)
+        from repro.serving.scheduler import Request  # cycle-free at runtime
+
+        tokens = np.asarray(tokens)
+        reqs = [Request(prompt=tokens[i], max_new_tokens=int(max_new_tokens),
+                        adapter=n) for i, n in enumerate(names)]
+        out = self._generate_rows(tokens, reqs, int(max_new_tokens), rng,
+                                  top_k)
+        return np.stack(out, axis=0)

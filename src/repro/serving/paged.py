@@ -42,7 +42,6 @@ restricted to full-attention configs).
 """
 from __future__ import annotations
 
-import time
 from collections import OrderedDict, deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
@@ -471,32 +470,12 @@ class PagedScheduler(Scheduler):
 
     # -- the tick -----------------------------------------------------------
 
-    def step(self) -> int:
-        free = [i for i, s in enumerate(self.slots) if s is None]
-        while free and self.queue:
-            idx = free.pop()
-            rid, req, submit_t = self.queue.popleft()
-            try:
-                self._admit_one(idx, rid, req, submit_t)
-            except KeyError:
-                now = time.perf_counter()
-                self.completions[rid] = Completion(
-                    request_id=rid, tokens=np.zeros((0,), np.int32),
-                    prompt_len=int(np.asarray(req.prompt).shape[-1]),
-                    task_id=-1, finish_reason="error", ttft_s=0.0,
-                    latency_s=now - submit_t, adapter=req.adapter)
-                free.append(idx)
-            except (BankFullError, BlockPoolFullError):
-                # not enough pinned-bank rows / free blocks yet: put the
-                # request back in FIFO position and retry after the next
-                # retirement releases capacity (no reordering - skipping
-                # ahead would starve the blocked tenant)
-                self.queue.appendleft((rid, req, submit_t))
-                free.append(idx)
-                break
-            if self.slots[idx] is None:
-                free.append(idx)
+    # defer on block exhaustion too: admission retries after the next
+    # retirement releases capacity (base _do_admissions, FIFO preserved)
+    _defer_errors = (BankFullError, BlockPoolFullError)
 
+    def step(self) -> int:
+        self._do_admissions()
         occupied = [i for i, s in enumerate(self.slots) if s is not None]
         if not occupied:
             return 0

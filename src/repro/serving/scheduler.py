@@ -257,12 +257,14 @@ class Scheduler:
 
     # -- the tick -----------------------------------------------------------
 
-    def step(self) -> int:
-        """One scheduler tick: admit into free slots, then one fused decode
-        step across all occupied slots. Returns the number of tokens
-        generated this tick."""
-        # admissions (a request finishing at its first token frees the
-        # slot again, so keep admitting until slots or queue run out)
+    # admission failures that defer the queue to a later tick instead of
+    # failing the request (paged schedulers add BlockPoolFullError)
+    _defer_errors = (BankFullError,)
+
+    def _do_admissions(self) -> None:
+        """Admit queued requests into free slots. A request finishing at
+        its first token frees the slot again, so keep admitting until
+        slots or queue run out."""
         free = [i for i, s in enumerate(self.slots) if s is None]
         while free and self.queue:
             idx = free.pop()
@@ -280,18 +282,24 @@ class Scheduler:
                     task_id=-1, finish_reason="error", ttft_s=0.0,
                     latency_s=now - submit_t, adapter=req.adapter)
                 free.append(idx)
-            except BankFullError:
-                # every bank row is pinned by an in-flight request: put the
-                # request back (FIFO order preserved) and retry once a
-                # retirement unpins a row. Deliberately not skipping ahead
-                # to later queued requests - reordering would starve the
-                # blocked tenant under sustained traffic.
+            except self._defer_errors:
+                # a shared resource (bank rows / pool blocks) is exhausted
+                # by in-flight requests: put the request back (FIFO order
+                # preserved) and retry once a retirement frees capacity.
+                # Deliberately not skipping ahead to later queued requests
+                # - reordering would starve the blocked tenant under
+                # sustained traffic.
                 self.queue.appendleft((rid, req, submit_t))
                 free.append(idx)
                 break
             if self.slots[idx] is None:
                 free.append(idx)
 
+    def step(self) -> int:
+        """One scheduler tick: admit into free slots, then one fused decode
+        step across all occupied slots. Returns the number of tokens
+        generated this tick."""
+        self._do_admissions()
         occupied = [i for i, s in enumerate(self.slots) if s is not None]
         if not occupied:
             return 0

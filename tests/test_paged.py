@@ -26,10 +26,11 @@ from repro.common.types import Group, Slot
 from repro.kernels import ops, ref
 from repro.models import model as M
 from repro.quant.qtensor import quantize
+from repro.serving import ServingConfig, make_scheduler
 from repro.serving.engine import ServeEngine
 from repro.serving.paged import (BlockAllocator, BlockPoolFullError,
-                                 PagedScheduler, PrefixCache)
-from repro.serving.scheduler import Request, Scheduler
+                                 PrefixCache)
+from repro.serving.scheduler import Request
 
 KEY = jax.random.PRNGKey(42)
 
@@ -227,7 +228,8 @@ def _reqs(rng, n, stem=None, new=5):
 
 
 def _contiguous_tokens(cfg, params, reqs, max_len=32):
-    sched = Scheduler(ServeEngine(cfg, params), num_slots=3, max_len=max_len)
+    sched = make_scheduler(ServeEngine(cfg, params),
+                           ServingConfig(num_slots=3, max_len=max_len))
     done, _ = sched.run([Request(prompt=r.prompt,
                                  max_new_tokens=r.max_new_tokens,
                                  eos_id=r.eos_id) for r in reqs])
@@ -241,8 +243,8 @@ def test_warm_full_hit_skips_forward_and_stays_exact():
     want = _contiguous_tokens(cfg, params, reqs)
 
     eng = ServeEngine(cfg, params)
-    sched = PagedScheduler(eng, num_slots=3, num_blocks=48, page=8,
-                           max_len=32)
+    sched = make_scheduler(eng, ServingConfig(
+        num_slots=3, max_len=32, paged=True, page_size=8, num_blocks=48))
     done_cold, _ = sched.run(reqs)
     for w, c in zip(want, done_cold):
         np.testing.assert_array_equal(w, c.tokens)
@@ -268,8 +270,8 @@ def test_partial_prefix_hit_extends_exactly():
     reqs = _reqs(rng, 8, stem=stem)
     want = _contiguous_tokens(cfg, params, reqs)
 
-    sched = PagedScheduler(ServeEngine(cfg, params), num_slots=3,
-                           num_blocks=64, page=8, max_len=32)
+    sched = make_scheduler(ServeEngine(cfg, params), ServingConfig(
+        num_slots=3, max_len=32, paged=True, page_size=8, num_blocks=64))
     done, _ = sched.run(reqs)
     assert sched.stats["partial_hits"] > 0
     for w, c in zip(want, done):
@@ -286,8 +288,8 @@ def test_cow_fork_isolates_concurrent_sharers():
     mk = lambda: Request(prompt=prompt, max_new_tokens=5, eos_id=0)
     want = _contiguous_tokens(cfg, params, [mk()])[0]
 
-    sched = PagedScheduler(ServeEngine(cfg, params), num_slots=3,
-                           num_blocks=32, page=8, max_len=32)
+    sched = make_scheduler(ServeEngine(cfg, params), ServingConfig(
+        num_slots=3, max_len=32, paged=True, page_size=8, num_blocks=32))
     sched.run([mk()])  # seed the prefix cache
     done, _ = sched.run([mk(), mk(), mk()])  # admitted the same tick
     assert sched.stats["full_hits"] == 3
@@ -301,9 +303,9 @@ def test_int8_kv_blocks_bounded_top1():
     reqs = _reqs(rng, 8, stem=rng.integers(1, 96, 9))
     want = np.concatenate(_contiguous_tokens(cfg, params, reqs))
 
-    sched = PagedScheduler(ServeEngine(cfg, params), num_slots=3,
-                           num_blocks=64, page=8, max_len=32,
-                           kv_quant="int8")
+    sched = make_scheduler(ServeEngine(cfg, params), ServingConfig(
+        num_slots=3, max_len=32, paged=True, page_size=8, num_blocks=64,
+        kv_quant="int8"))
     done, _ = sched.run(reqs)
     got = np.concatenate([c.tokens for c in done])
     n = min(len(got), len(want))
@@ -319,9 +321,9 @@ def test_block_exhaustion_backpressures_and_drains():
     reqs = _reqs(rng, 10)
     want = _contiguous_tokens(cfg, params, reqs)
 
-    sched = PagedScheduler(ServeEngine(cfg, params), num_slots=4,
-                           num_blocks=9, page=8, max_len=32,
-                           prefix_cache=False)
+    sched = make_scheduler(ServeEngine(cfg, params), ServingConfig(
+        num_slots=4, max_len=32, paged=True, page_size=8, num_blocks=9,
+        prefix_cache=False))
     done, _ = sched.run(reqs)
     assert [c.request_id for c in done] == list(range(10))
     for w, c in zip(want, done):
@@ -332,8 +334,8 @@ def test_block_exhaustion_backpressures_and_drains():
 
 def test_oversized_request_rejected_at_submit():
     cfg, params = _world()
-    sched = PagedScheduler(ServeEngine(cfg, params), num_slots=2,
-                           num_blocks=3, page=8, max_len=32)
+    sched = make_scheduler(ServeEngine(cfg, params), ServingConfig(
+        num_slots=2, max_len=32, paged=True, page_size=8, num_blocks=3))
     with pytest.raises(ValueError):
         sched.submit(Request(prompt=np.arange(1, 20, dtype=np.int32),
                              max_new_tokens=8))
@@ -346,15 +348,16 @@ def test_windowed_config_runs_cold_and_validates_page():
     reqs = _reqs(rng, 4)
     want = _contiguous_tokens(cfg, params, reqs)
 
-    sched = PagedScheduler(ServeEngine(cfg, params), num_slots=2,
-                           num_blocks=16, page=8, max_len=32)
+    sched = make_scheduler(ServeEngine(cfg, params), ServingConfig(
+        num_slots=2, max_len=32, paged=True, page_size=8, num_blocks=16))
     assert sched.prefix is None  # ring caches are not prefix-shareable
     done, _ = sched.run(reqs)
     for w, c in zip(want, done):
         np.testing.assert_array_equal(w, c.tokens)
     with pytest.raises(ValueError):  # ring 16 not a multiple of page 12
-        PagedScheduler(ServeEngine(cfg, params), num_slots=2, num_blocks=16,
-                       page=12, max_len=24)
+        make_scheduler(ServeEngine(cfg, params), ServingConfig(
+            num_slots=2, max_len=24, paged=True, page_size=12,
+            num_blocks=16))
 
 
 # ---------------------------------------------------------------------------

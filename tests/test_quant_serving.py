@@ -18,8 +18,9 @@ from repro.core.hadamard import extract_delta, perturb_adapters
 from repro.models import model as M
 from repro.quant import is_qtensor, quant_summary, quantize_tree
 from repro.quant.qtensor import quantizable
+from repro.serving import ServingConfig, make_scheduler
 from repro.serving.engine import MultiTaskEngine, ServeEngine
-from repro.serving.scheduler import Request, Scheduler
+from repro.serving.scheduler import Request
 
 KEY = jax.random.PRNGKey(0)
 
@@ -146,7 +147,8 @@ def test_scheduler_fuzz_int8_vs_fp32_oracle(seed):
             eos_id=eos)))
         wants.append(ref)
 
-    sched = Scheduler(w["hot"], num_slots=3, max_len=16)
+    sched = make_scheduler(w["hot"],
+                           ServingConfig(num_slots=3, max_len=16))
     ids = [None] * n_req
     t = 0
     while None in ids or sched.pending or sched.active:

@@ -19,10 +19,11 @@ from repro.core.hadamard import (adapter_row, extract_bank_row, extract_delta,
                                  init_bank, perturb_adapters,
                                  validate_adapter_row)
 from repro.models import model as M
+from repro.serving import ServingConfig, make_scheduler
 from repro.serving.engine import MultiTaskEngine, ServeEngine
 from repro.serving.registry import (AdapterBank, AdapterRegistry,
                                     BankFullError)
-from repro.serving.scheduler import Request, Scheduler
+from repro.serving.scheduler import Request
 
 KEY = jax.random.PRNGKey(0)
 
@@ -213,7 +214,7 @@ def test_hot_swap_parity_and_single_compile(world):
     static = MultiTaskEngine(cfg, variants)
     hot = MultiTaskEngine(cfg, AdapterBank(cfg, base, 2, world["registry"]))
     toks = np.asarray(jax.random.randint(KEY, (2, 8), 0, 97))
-    sched = Scheduler(hot, num_slots=2, max_len=16)
+    sched = make_scheduler(hot, ServingConfig(num_slots=2, max_len=16))
 
     # 6 rounds over 4 tasks through 2 rows: every round after the first
     # evicts + reloads, and tasks 0/1 are re-inserted after eviction;
@@ -248,7 +249,7 @@ def test_scheduler_hot_swap_parity_under_churn(world):
     rs = np.random.RandomState(7)
     prompts = [rs.randint(0, 97, size=(4 + i % 4,)) for i in range(8)]
 
-    sched = Scheduler(hot, num_slots=3, max_len=16)
+    sched = make_scheduler(hot, ServingConfig(num_slots=3, max_len=16))
     done, _ = sched.run([
         Request(prompt=prompts[i], max_new_tokens=3 + i % 3,
                 adapter=f"task{i % 4}")
@@ -276,7 +277,7 @@ def test_scheduler_bank_backpressure_no_deadlock(world):
     reqs = [Request(prompt=rs.randint(0, 97, size=(5,)),
                     max_new_tokens=2 + i % 3, adapter=f"task{i % 3}")
             for i in range(6)]
-    sched = Scheduler(hot, num_slots=2, max_len=16)
+    sched = make_scheduler(hot, ServingConfig(num_slots=2, max_len=16))
     done, report = sched.run(reqs)
     assert len(done) == 6
     for i, c in enumerate(done):
@@ -287,19 +288,21 @@ def test_scheduler_bank_backpressure_no_deadlock(world):
 def test_scheduler_submit_validates_names(world):
     cfg, base, variants = world["cfg"], world["base"], world["variants"]
     hot = MultiTaskEngine(cfg, AdapterBank(cfg, base, 2, world["registry"]))
-    sched = Scheduler(hot, num_slots=1, max_len=16)
+    sched = make_scheduler(hot, ServingConfig(num_slots=1, max_len=16))
     with pytest.raises(KeyError, match="neither bank-resident"):
         sched.submit(Request(prompt=np.zeros(4, np.int32), max_new_tokens=2,
                              adapter="ghost"))
 
     static = MultiTaskEngine(cfg, variants[:2])
-    sched2 = Scheduler(static, num_slots=1, max_len=16)
+    sched2 = make_scheduler(static,
+                            ServingConfig(num_slots=1, max_len=16))
     with pytest.raises(ValueError, match="AdapterBank"):
         sched2.submit(Request(prompt=np.zeros(4, np.int32), max_new_tokens=2,
                               adapter="task0"))
 
     plain = ServeEngine(cfg, base)
-    sched3 = Scheduler(plain, num_slots=1, max_len=16)
+    sched3 = make_scheduler(plain,
+                            ServingConfig(num_slots=1, max_len=16))
     with pytest.raises(ValueError, match="AdapterBank"):
         sched3.submit(Request(prompt=np.zeros(4, np.int32), max_new_tokens=2,
                               adapter="task0"))
@@ -361,7 +364,7 @@ def test_scheduler_adapter_removed_between_submit_and_admission(world):
         for t, v in enumerate(variants[:2]):
             reg.publish(f"task{t}", extract_delta(v))
         hot = MultiTaskEngine(cfg, AdapterBank(cfg, base, 2, reg))
-        sched = Scheduler(hot, num_slots=1, max_len=16)
+        sched = make_scheduler(hot, ServingConfig(num_slots=1, max_len=16))
         toks = np.asarray(jax.random.randint(KEY, (1, 6), 0, 97))
         ok = sched.submit(Request(prompt=toks[0], max_new_tokens=3,
                                   adapter="task0"))

@@ -11,6 +11,7 @@ from conftest import tiny_cfg
 from repro.common import tree as tu
 from repro.common.types import AdapterCfg, Group, Slot
 from repro.models import model as M
+from repro.serving import ServingConfig, make_scheduler
 from repro.serving.engine import MultiTaskEngine, ServeEngine
 from repro.serving.scheduler import Request, Scheduler
 
@@ -31,7 +32,7 @@ def test_scheduler_greedy_parity_with_static_engine():
     toks = np.asarray(jax.random.randint(KEY, (5, 8), 0, 97))
     want = eng.generate(toks, 6)
 
-    sched = Scheduler(eng, num_slots=2, max_len=20)
+    sched = make_scheduler(eng, ServingConfig(num_slots=2, max_len=20))
     done, report = sched.run(
         [Request(prompt=toks[i], max_new_tokens=6) for i in range(5)])
 
@@ -50,7 +51,7 @@ def test_scheduler_parity_with_local_window():
     toks = np.asarray(jax.random.randint(KEY, (3, 8), 0, 97))
     want = eng.generate(toks, 6)
 
-    sched = Scheduler(eng, num_slots=2, max_len=20)
+    sched = make_scheduler(eng, ServingConfig(num_slots=2, max_len=20))
     done, _ = sched.run(
         [Request(prompt=toks[i], max_new_tokens=6) for i in range(3)])
     for i, c in enumerate(done):
@@ -67,7 +68,7 @@ def test_slot_reuse_more_requests_than_slots():
                 max_new_tokens=1 + i % 5)
         for i in range(7)
     ]
-    sched = Scheduler(eng, num_slots=2, max_len=16)
+    sched = make_scheduler(eng, ServingConfig(num_slots=2, max_len=16))
     done, report = sched.run(reqs)
 
     assert len(done) == 7
@@ -92,7 +93,7 @@ def test_mixed_task_tick():
     want1 = ServeEngine(cfg, p1).generate(toks, 5)
 
     eng = MultiTaskEngine(cfg, [p0, p1])
-    sched = Scheduler(eng, num_slots=3, max_len=16)
+    sched = make_scheduler(eng, ServingConfig(num_slots=3, max_len=16))
     done, _ = sched.run(
         [Request(prompt=toks[i], max_new_tokens=5, task_id=i % 2)
          for i in range(4)])
@@ -107,7 +108,7 @@ def test_eos_retires_slot_early():
     want = eng.generate(toks, 6)[0]
     eos = int(want[2])
 
-    sched = Scheduler(eng, num_slots=1, max_len=20)
+    sched = make_scheduler(eng, ServingConfig(num_slots=1, max_len=20))
     done, _ = sched.run(
         [Request(prompt=toks[0], max_new_tokens=6, eos_id=eos)])
     assert done[0].finish_reason == "eos"
@@ -116,7 +117,7 @@ def test_eos_retires_slot_early():
 
 def test_submit_rejects_over_budget_prompt():
     eng, _ = _engine()
-    sched = Scheduler(eng, num_slots=1, max_len=8)
+    sched = make_scheduler(eng, ServingConfig(num_slots=1, max_len=8))
     with pytest.raises(ValueError, match="exceeds slot cache length"):
         sched.submit(Request(prompt=np.zeros(6, np.int32), max_new_tokens=4))
     with pytest.raises(ValueError, match="max_new_tokens"):
@@ -131,7 +132,8 @@ def test_prefill_bucketing_token_exact():
     prompts = [rs.randint(0, 97, size=(n,)) for n in (3, 5, 8, 11)]
     want = [eng.generate(p.reshape(1, -1), 5)[0] for p in prompts]
 
-    sched = Scheduler(eng, num_slots=2, max_len=20, prefill_bucket=8)
+    sched = make_scheduler(eng, ServingConfig(num_slots=2, max_len=20,
+                                              prefill_bucket=8))
     done, _ = sched.run(
         [Request(prompt=p, max_new_tokens=5) for p in prompts])
     for i, c in enumerate(done):
@@ -141,7 +143,8 @@ def test_prefill_bucketing_token_exact():
 def test_prefill_bucketing_rejects_windowed_configs():
     eng, _ = _engine(groups=(Group((Slot("attn", window=6),), 2),))
     with pytest.raises(ValueError, match="full-attention"):
-        Scheduler(eng, num_slots=1, max_len=16, prefill_bucket=8)
+        make_scheduler(eng, ServingConfig(num_slots=1, max_len=16,
+                                          prefill_bucket=8))
 
 
 def test_scheduler_topk_sampling_deterministic_per_seed():
@@ -151,7 +154,8 @@ def test_scheduler_topk_sampling_deterministic_per_seed():
     toks = np.asarray(jax.random.randint(KEY, (3, 8), 0, 97))
 
     def sample(order):
-        sched = Scheduler(eng, num_slots=2, max_len=20)
+        sched = make_scheduler(eng,
+                               ServingConfig(num_slots=2, max_len=20))
         done, _ = sched.run(
             [Request(prompt=toks[i], max_new_tokens=5, top_k=40, seed=7 + i)
              for i in order])
@@ -241,7 +245,8 @@ def test_scheduler_fuzz_against_static_oracle(seed):
             eos_id=eos)))
         wants.append(_oracle_tokens(w["oracle"], prompt, task, budget, eos))
 
-    sched = Scheduler(w["hot"], num_slots=3, max_len=max_len)
+    sched = make_scheduler(w["hot"],
+                           ServingConfig(num_slots=3, max_len=max_len))
     ids = [None] * n_req
     t = 0
     while None in ids or sched.pending or sched.active:
@@ -309,8 +314,6 @@ def test_paged_scheduler_fuzz_against_static_oracle(seed):
     enough that admissions hit block-exhaustion backpressure and prefix-
     cache eviction - must be token-exact against the lock-step static
     oracle at fp32, with the paged decode tick traced exactly once."""
-    from repro.serving.paged import PagedScheduler
-
     w = _fuzz_world()
     rs = np.random.RandomState(300 + seed)
     n_req = 14
@@ -343,8 +346,9 @@ def test_paged_scheduler_fuzz_against_static_oracle(seed):
 
     # 12 allocatable blocks for 3 slots x up to 4-block requests plus the
     # prefix cache: admission regularly has to evict and/or defer
-    sched = PagedScheduler(w["oracle"], num_slots=3, num_blocks=13,
-                           page=page, max_len=max_len)
+    sched = make_scheduler(w["oracle"], ServingConfig(
+        num_slots=3, max_len=max_len, paged=True, page_size=page,
+        num_blocks=13))
     ids = [None] * n_req
     t = 0
     while None in ids or sched.pending or sched.active:
@@ -384,8 +388,6 @@ def test_paged_scheduler_fuzz_windowed_cold_lane():
     """Windowed config through the paged scheduler: ring layouts disable
     prefix sharing (cold lane), but paging + backpressure must still be
     token-exact vs the contiguous scheduler under staggered traffic."""
-    from repro.serving.paged import PagedScheduler
-
     eng, cfg = _engine(groups=(Group((Slot("attn", window=8),), 2),))
     rs = np.random.RandomState(7)
     reqs = [Request(prompt=rs.randint(0, 97, size=(int(rs.randint(2, 12)),))
@@ -393,11 +395,12 @@ def test_paged_scheduler_fuzz_windowed_cold_lane():
                     max_new_tokens=int(rs.randint(1, 6)), eos_id=96)
             for _ in range(8)]
 
-    want, _ = Scheduler(eng, num_slots=3, max_len=16).run(
+    want, _ = make_scheduler(eng, ServingConfig(num_slots=3,
+                                                max_len=16)).run(
         [Request(prompt=r.prompt, max_new_tokens=r.max_new_tokens,
                  eos_id=r.eos_id) for r in reqs])
-    sched = PagedScheduler(eng, num_slots=3, num_blocks=7, page=4,
-                           max_len=16)
+    sched = make_scheduler(eng, ServingConfig(
+        num_slots=3, max_len=16, paged=True, page_size=4, num_blocks=7))
     assert sched.prefix is None
     done, _ = sched.run(reqs)
     for wc, c in zip(want, done):

@@ -529,14 +529,15 @@ def test_shared_w_bank_serves_factorized_tenants():
     assert dense_b / (dense_b - shared_b) == pytest.approx(4.0)  # T=2 bank
     # and through the scheduler: all 4 tenants cycle through the 2-row
     # shared bank mid-decode, token-exact vs the shared oracle
-    from repro.serving.scheduler import Request, Scheduler
+    from repro.serving import Request, ServingConfig, make_scheduler
 
     prompts = [np.asarray(jax.random.randint(
         jax.random.fold_in(KEY, i), (5,), 0, 97)) for i in range(4)]
     wants = [np.asarray(w["shared_oracle"].generate_for_tasks(
         p.reshape(1, -1), np.array([t]), 4))[0]
         for t, p in enumerate(prompts)]
-    sched = Scheduler(w["shared_hot"], num_slots=2, max_len=16)
+    sched = make_scheduler(w["shared_hot"],
+                           ServingConfig(num_slots=2, max_len=16))
     done, _ = sched.run([Request(prompt=p, max_new_tokens=4,
                                  adapter=f"task{t}")
                          for t, p in enumerate(prompts)])
@@ -549,7 +550,7 @@ def test_scheduler_fuzz_mixed_sparse_dense_vs_oracle(seed):
     """Randomized traffic mixing dense, packed-pruned, and shared-style
     tenants through a 2-row bank (evictions + reloads mid-stream) is
     token-exact against the lock-step dense oracle."""
-    from repro.serving.scheduler import Request, Scheduler
+    from repro.serving import Request, ServingConfig, make_scheduler
 
     w = _serving_world()
     rs = np.random.RandomState(800 + seed)
@@ -571,7 +572,8 @@ def test_scheduler_fuzz_mixed_sparse_dense_vs_oracle(seed):
             eos_id=eos)))
         wants.append(ref_toks)
 
-    sched = Scheduler(w["hot"], num_slots=2, max_len=16)
+    sched = make_scheduler(w["hot"],
+                           ServingConfig(num_slots=2, max_len=16))
     ids = [None] * n_req
     t = 0
     while None in ids or sched.pending or sched.active:
