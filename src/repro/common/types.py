@@ -268,6 +268,15 @@ class OptimCfg:
     min_lr_ratio: float = 0.1
     # int8 error-feedback gradient compression (distributed-optimization knob)
     compress_grads: bool = False
+    # AdamW moment storage (repro.optim.qstate): 'float32' (exact, the
+    # historical state layout, bit-for-bit), 'bfloat16', or 'int8'
+    # (block-wise QTensor behind the repro.quant primitive). Selected
+    # per-moment; the memory-lean pretraining preset is m bf16 + v int8.
+    m_dtype: str = "float32"
+    v_dtype: str = "float32"
+    # error-feedback residual for int8 moments (defeats the 8-bit grid's
+    # deadzone; costs one extra int8 tree per int8 moment)
+    qstate_ef: bool = True
 
 
 @dataclass(frozen=True)

@@ -19,6 +19,7 @@ from repro.dist.sharding import (
     cache_shardings,
     cache_spec,
     fit_spec,
+    opt_state_shardings,
     param_spec,
     params_shardings,
 )
@@ -34,6 +35,7 @@ __all__ = [
     "cache_shardings",
     "cache_spec",
     "fit_spec",
+    "opt_state_shardings",
     "param_spec",
     "params_shardings",
 ]

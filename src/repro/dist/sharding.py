@@ -233,6 +233,23 @@ def cache_shardings(caches, cfg, mesh):
     return tu.map_with_path(one, caches)
 
 
+def opt_state_shardings(opt_state, cfg, mesh):
+    """NamedShardings for an AdamW state tree (repro.optim.qstate).
+
+    Moment trees mirror the trainable tree's paths under `m/`, `v/` (and
+    `m_err/`/`v_err/` residual) prefixes, so the rule table resolves each
+    moment leaf against its parameter's own pattern - a moment (or its
+    QTensor `values`) shards exactly like the leaf it tracks, which is
+    what keeps the optimizer update collective-free under TP/FSDP. Scale
+    leaves reuse the same template and `fit_spec` drops any entry landing
+    on the collapsed size-1 block dim: scales of column-parallel weights
+    (blocked along the sharded output dim) come out replicated, scales of
+    row-parallel weights co-shard with their rows. The `count` scalar is
+    replicated.
+    """
+    return params_shardings(opt_state, cfg, mesh)
+
+
 # ---------------------------------------------------------------------------
 # Slot-pool caches (continuous-batching scheduler)
 # ---------------------------------------------------------------------------

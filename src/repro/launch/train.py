@@ -24,6 +24,8 @@ from repro.data.pipeline import Prefetcher, shard_batches
 from repro.data.synthetic import TASKS, TaskData, lm_batches, lm_corpus
 from repro.dist.api import use_mesh
 from repro.launch.mesh import parse_mesh
+from repro.launch.pretrain import QUANT_PRESETS
+from repro.optim import qstate
 from repro.train.loop import StepWatchdog, run_train, two_stage_finetune
 from repro.train.steps import build_train_step, make_state
 
@@ -46,6 +48,15 @@ def main():
     ap.add_argument("--save-every", type=int, default=0)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--quant-moments", default="",
+                    choices=sorted(QUANT_PRESETS),
+                    help="AdamW moment storage (repro.optim.qstate): "
+                         "bf16 / bf16+int8 / int8. Matters most with "
+                         "--peft full, where the moments are the memory "
+                         "ceiling; '' keeps exact fp32 moments")
+    ap.add_argument("--no-ef", action="store_true",
+                    help="disable int8 moment error feedback (bytes floor "
+                         "only - no-EF int8 v deadzones and diverges)")
     ap.add_argument("--prune-to", type=int, default=0,
                     help="repro.sparse: train only the top-K layers' "
                          "adapters (mask-gated gradients; the rest stay "
@@ -68,8 +79,10 @@ def main():
     mesh = parse_mesh(args.mesh)
     cfg = get_smoke(args.arch) if args.smoke else get(args.arch)
     strat = peft.strategy(args.peft)
+    m_dt, v_dt = QUANT_PRESETS[args.quant_moments]
     ocfg = OptimCfg(lr=args.lr, total_steps=args.steps,
-                    compress_grads=args.compress_grads)
+                    compress_grads=args.compress_grads,
+                    m_dtype=m_dt, v_dtype=v_dt, qstate_ef=not args.no_ef)
 
     layer_mask = None
     if args.prune_to:
@@ -122,6 +135,12 @@ def main():
         state = make_state(jax.random.PRNGKey(args.seed), cfg, strat, ocfg,
                            params=params, quant=args.quant or None,
                            quant_stats=stats)
+        if qstate.quantized_moments(ocfg):
+            qss = qstate.state_summary(state["opt"], ocfg)
+            print(f"optimizer state: {qss['bytes'] / 2**20:.2f} MiB for "
+                  f"{qss['n_params']:,} params (fp32 would be "
+                  f"{qss['bytes_fp32'] / 2**20:.2f} MiB; "
+                  f"{qss['ratio']:.2f}x)")
         if args.quant:
             from repro.quant import quant_summary
 

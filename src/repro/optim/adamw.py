@@ -1,8 +1,13 @@
 """AdamW with decoupled weight decay, over *trainable-only* trees.
 
-State exists only for non-None leaves (the PEFT partition), in fp32.
-With the Hadamard strategy this is ~0.03 % of the model — the optimizer
-memory collapse that makes giant-model fine-tuning cheap.
+State exists only for non-None leaves (the PEFT partition). With the
+Hadamard strategy this is ~0.03 % of the model - the optimizer memory
+collapse that makes giant-model fine-tuning cheap. For full-backbone
+pretraining the moments ARE the memory ceiling, so their storage dtype is
+selectable per-moment via `OptimCfg.m_dtype`/`v_dtype` (fp32 / bf16 /
+block-wise int8 QTensors with optional error feedback - repro.optim.qstate).
+The fp32/fp32 default keeps the historical state layout and update
+sequence bit-for-bit.
 """
 from __future__ import annotations
 
@@ -11,17 +16,16 @@ import jax.numpy as jnp
 
 from repro.common import tree as tu
 from repro.common.types import OptimCfg
+from repro.optim import qstate
+from repro.quant.qtensor import is_qtensor
 
 
-def adamw_init(trainable):
-    def zeros(v):
-        return None if v is None else jnp.zeros(v.shape, jnp.float32)
-
-    return {
-        "m": jax.tree.map(zeros, trainable, is_leaf=lambda v: v is None),
-        "v": jax.tree.map(zeros, trainable, is_leaf=lambda v: v is None),
-        "count": jnp.zeros((), jnp.int32),
-    }
+def adamw_init(trainable, cfg: OptimCfg = None):
+    """Zeroed AdamW state over `trainable`. Without a cfg (or with fp32
+    moment dtypes) this is the historical {m, v, count} fp32 layout."""
+    if cfg is None:
+        cfg = OptimCfg()
+    return qstate.init_opt_state(trainable, cfg)
 
 
 def clip_by_global_norm(grads, max_norm: float):
@@ -31,44 +35,78 @@ def clip_by_global_norm(grads, max_norm: float):
 
 
 def adamw_update(grads, state, params, cfg: OptimCfg, lr):
-    """Returns (new_params, new_state). All trees may contain None leaves."""
+    """Returns (new_params, new_state). All trees may contain None leaves.
+
+    Moments are decoded to fp32 (plus their error-feedback residual on the
+    int8 path), updated exactly as the fp32 optimizer would, used for the
+    parameter step at full precision, and re-encoded for storage. When
+    m_dtype = v_dtype = 'float32' every encode/decode is the identity and
+    the update is bit-exact with the historical implementation.
+    """
     count = state["count"] + 1
     c1 = 1.0 - cfg.b1**count.astype(jnp.float32)
     c2 = 1.0 - cfg.b2**count.astype(jnp.float32)
+    m_dt = getattr(cfg, "m_dtype", "float32")
+    v_dt = getattr(cfg, "v_dtype", "float32")
+    has_me = "m_err" in state
+    has_ve = "v_err" in state
 
-    def upd(g, m, v, p):
+    def upd(g, m, v, me, ve, p):
         if g is None or p is None:
-            return None, None, p
+            return None, None, None, None, p
         g32 = g.astype(jnp.float32)
-        m = cfg.b1 * m + (1 - cfg.b1) * g32
-        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g32)
-        mhat = m / c1
-        vhat = v / c2
+        m32 = qstate.decode_moment(m)
+        if me is not None:
+            m32 = m32 + qstate.decode_moment(me)
+        v32 = qstate.decode_moment(v)
+        if ve is not None:
+            v32 = v32 + qstate.decode_moment(ve)
+        m32 = cfg.b1 * m32 + (1 - cfg.b1) * g32
+        v32 = cfg.b2 * v32 + (1 - cfg.b2) * jnp.square(g32)
+        if v_dt == "int8":
+            # the EF residual can push the reconstructed v a hair below
+            # zero; clamp before sqrt (a no-op in exact arithmetic)
+            v32 = jnp.maximum(v32, 0.0)
+        mhat = m32 / c1
+        vhat = v32 / c2
         step = mhat / (jnp.sqrt(vhat) + cfg.eps)
         p32 = p.astype(jnp.float32)
         if cfg.weight_decay and p.ndim >= 2:  # decay matrices, not vectors
             step = step + cfg.weight_decay * p32
-        return m, v, (p32 - lr * step).astype(p.dtype)
+        new_m, new_me = qstate.encode_moment(m32, m_dt, ef=has_me)
+        new_v, new_ve = qstate.encode_moment(v32, v_dt, ef=has_ve)
+        return new_m, new_v, new_me, new_ve, (p32 - lr * step).astype(p.dtype)
 
-    is_none = lambda v: v is None
+    # QTensor moment leaves must flatten whole (values+scales travel
+    # together through the per-leaf update), hence the explicit is_leaf.
+    is_none = lambda v: v is None or is_qtensor(v)
     flat_g = jax.tree.leaves(grads, is_leaf=is_none)
     flat_m = jax.tree.leaves(state["m"], is_leaf=is_none)
     flat_v = jax.tree.leaves(state["v"], is_leaf=is_none)
     flat_p = jax.tree.leaves(params, is_leaf=is_none)
-    treedef = jax.tree.structure(params, is_leaf=is_none)
+    flat_me = (jax.tree.leaves(state["m_err"], is_leaf=is_none)
+               if has_me else [None] * len(flat_p))
+    flat_ve = (jax.tree.leaves(state["v_err"], is_leaf=is_none)
+               if has_ve else [None] * len(flat_p))
+    treedef = jax.tree.structure(params, is_leaf=lambda v: v is None)
 
-    new_m, new_v, new_p = [], [], []
-    for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p):
-        m2, v2, p2 = upd(g, m, v, p)
+    new_m, new_v, new_me, new_ve, new_p = [], [], [], [], []
+    for g, m, v, me, ve, p in zip(flat_g, flat_m, flat_v, flat_me, flat_ve,
+                                  flat_p):
+        m2, v2, me2, ve2, p2 = upd(g, m, v, me, ve, p)
         new_m.append(m2)
         new_v.append(v2)
+        new_me.append(me2)
+        new_ve.append(ve2)
         new_p.append(p2)
 
-    return (
-        jax.tree.unflatten(treedef, new_p),
-        {
-            "m": jax.tree.unflatten(treedef, new_m),
-            "v": jax.tree.unflatten(treedef, new_v),
-            "count": count,
-        },
-    )
+    new_state = {
+        "m": jax.tree.unflatten(treedef, new_m),
+        "v": jax.tree.unflatten(treedef, new_v),
+        "count": count,
+    }
+    if has_me:
+        new_state["m_err"] = jax.tree.unflatten(treedef, new_me)
+    if has_ve:
+        new_state["v_err"] = jax.tree.unflatten(treedef, new_ve)
+    return jax.tree.unflatten(treedef, new_p), new_state

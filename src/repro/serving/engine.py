@@ -33,8 +33,26 @@ def sample_greedy(logits):
     return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
 
 
+def check_temperature(temperature) -> float:
+    """Validate a sampling temperature at request submission: 0 means
+    greedy (explicitly), anything negative or non-finite is a caller bug
+    worth rejecting before the request ever reaches a decode tick."""
+    t = float(temperature)
+    if not np.isfinite(t) or t < 0:
+        raise ValueError(
+            f"temperature must be finite and >= 0 (got {temperature!r}); "
+            "temperature=0 decodes greedily")
+    return t
+
+
 def sample_topk(logits, rng, k: int = 40, temperature: float = 1.0):
-    lg = logits[:, -1] / max(temperature, 1e-6)
+    """Top-k sampling; `temperature <= 0` is explicit argmax. (It used to
+    be clamped to 1e-6, so temperature=0 silently became a 1e6x logit
+    blow-up - numerically argmax-ish at best, inf/nan at worst - instead
+    of the greedy decode the caller asked for.)"""
+    if temperature <= 0:
+        return sample_greedy(logits)
+    lg = logits[:, -1] / temperature
     top, idx = jax.lax.top_k(lg, k)
     choice = jax.random.categorical(rng, top)
     return jnp.take_along_axis(idx, choice[:, None], axis=-1)[:, 0].astype(jnp.int32)
@@ -293,6 +311,8 @@ class ServeEngine:
         reqs = list(requests)
         if not reqs:
             return []
+        for r in reqs:
+            check_temperature(r.temperature)
         prompts = [np.asarray(r.prompt, np.int32).reshape(-1) for r in reqs]
         if len({p.shape[0] for p in prompts}) != 1:
             raise ValueError(

@@ -43,7 +43,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serving.engine import sample_topk
+from repro.serving.engine import check_temperature, sample_topk
 from repro.serving.registry import BankFullError
 
 
@@ -157,6 +157,7 @@ class Scheduler:
         so the queue never holds a request that can never be admitted."""
         if req.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
+        check_temperature(req.temperature)
         S = int(np.asarray(req.prompt).shape[-1])
         if S + req.max_new_tokens > self.max_len:
             raise ValueError(

@@ -3,6 +3,7 @@ operational hooks (checkpointing cadence, straggler watchdog).
 """
 from __future__ import annotations
 
+import functools
 import time
 from typing import Callable, Dict, Iterable, Optional
 
@@ -35,36 +36,78 @@ class StepWatchdog:
         slow = dt > self.factor * self.ewma
         if slow:
             self.stragglers.append((step, dt, self.ewma))
+            # clamp the baseline update for flagged steps: folding the
+            # straggler sample itself into the EWMA drags the baseline
+            # toward the pathology, so a run of consecutive stragglers
+            # raises its own detection threshold until it stops firing.
+            # The baseline may still drift up (a real regime change - e.g.
+            # a longer sequence bucket - should eventually be accepted),
+            # but never by more than the flagging threshold per step.
+            dt = self.factor * self.ewma
         self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
         return slow
+
+
+def _host_metrics(m: Dict) -> Dict[str, float]:
+    """Materialize one step's metric dict on the host (device sync)."""
+    return {k: float(v) for k, v in m.items()}
 
 
 def run_train(state, step_fn, batches: Iterable, *, steps: int,
               log_every: int = 0, manager=None, save_every: int = 0,
               watchdog: Optional[StepWatchdog] = None,
               log: Callable[[str], None] = print):
-    """Generic jit'd training loop. Returns (state, history)."""
+    """Generic jit'd training loop. Returns (state, history).
+
+    Metrics stay on device in the hot loop: forcing them to host floats
+    every step blocks on the step's completion and serializes dispatch
+    (the next step cannot be enqueued while the host waits on the
+    transfer). They are materialized only at the `log_every` cadence and
+    once more, in bulk, after the loop - history is returned as plain
+    float dicts either way. With a `watchdog` the loop *does* block every
+    step, on purpose: straggler detection needs the step's own wall time,
+    not the microseconds of an async dispatch.
+    """
     jstep = jax.jit(step_fn, donate_argnums=(0,))
     history = []
+    hosted: Dict[int, Dict[str, float]] = {}  # i -> cadence-materialized
     it = iter(batches)
     for i in range(steps):
         batch = next(it)
         t0 = time.perf_counter()
         state, m = jstep(state, batch)
-        m = {k: float(v) for k, v in m.items()}
-        dt = time.perf_counter() - t0
-        if watchdog is not None and watchdog.observe(i, dt):
-            log(f"[watchdog] straggler step {i}: {dt:.3f}s (ewma {watchdog.ewma:.3f}s)")
+        if watchdog is not None:
+            # barrier first: dt must time the step, not the dispatch (nor
+            # a later transfer that drains the previous step's queue)
+            jax.block_until_ready(m)
+            dt = time.perf_counter() - t0
+            if watchdog.observe(i, dt):
+                log(f"[watchdog] straggler step {i}: {dt:.3f}s "
+                    f"(ewma {watchdog.ewma:.3f}s)")
         history.append(m)
         if log_every and (i + 1) % log_every == 0:
-            log(f"step {i+1}/{steps} loss={m['loss']:.4f} gnorm={m['grad_norm']:.3f}")
+            hm = hosted[i] = _host_metrics(m)
+            log(f"step {i+1}/{steps} loss={hm['loss']:.4f} "
+                f"gnorm={hm['grad_norm']:.3f}")
         if manager is not None and save_every and (i + 1) % save_every == 0:
             manager.save(int(state["step"]), state)
+    history = [hosted[i] if i in hosted else _host_metrics(m)
+               for i, m in enumerate(history)]
     return state, history
 
 
+@functools.lru_cache(maxsize=None)
+def _jitted_eval_step(cfg: ModelCfg):
+    """One jitted eval step per config: `evaluate` used to wrap
+    `build_eval_step` in a fresh `jax.jit` on every call, retracing per
+    eval - the sparse ablation loop calls it once per layer. ModelCfg is
+    a frozen (hashable) dataclass, so the jit wrapper - and with it jax's
+    own trace cache - is memoized per config."""
+    return jax.jit(build_eval_step(cfg))
+
+
 def evaluate(cfg: ModelCfg, params, eval_batches, metric: str = "acc") -> float:
-    ev = jax.jit(build_eval_step(cfg))
+    ev = _jitted_eval_step(cfg)
     preds, labels = [], []
     for batch in eval_batches:
         preds.append(np.asarray(ev(params, batch)))

@@ -63,12 +63,36 @@ def mlm_batches(corpus: np.ndarray, steps: int, batch: int, seq: int,
                "type_ids": np.zeros_like(toks)}
 
 
+def pretrain_tag(cfg: ModelCfg, *, steps: int, batch: int, seq: int,
+                 lr: float, mask_rate: float, seed: int,
+                 optim: "OptimCfg" = None) -> str:
+    """Disk-cache key for a pretrained backbone. Every knob that changes
+    the trained weights must appear here: the tag used to omit `lr` and
+    `mask_rate`, so changing either silently reused a stale cached
+    backbone. Non-fp32 moment dtypes (repro.optim.qstate) are training-
+    trajectory-relevant too, so they key the cache as well."""
+    tag = (f"{cfg.name}_s{steps}_b{batch}_q{seq}"
+           f"_lr{lr:g}_mr{mask_rate:g}_seed{seed}")
+    if optim is not None and (optim.m_dtype, optim.v_dtype) != \
+            ("float32", "float32"):
+        tag += f"_m{optim.m_dtype}_v{optim.v_dtype}"
+    return tag
+
+
 def pretrain_encoder(cfg: ModelCfg, *, steps: int = 600, batch: int = 32,
-                     seq: int = 64, lr: float = 1e-3, seed: int = 0,
-                     cache_dir: str = "results/pretrained", log=print):
-    """Returns MLM-pretrained params (cached by config name + budget)."""
+                     seq: int = 64, lr: float = 1e-3,
+                     mask_rate: float = 0.15, seed: int = 0,
+                     cache_dir: str = "results/pretrained",
+                     optim: OptimCfg = None, log=print):
+    """Returns MLM-pretrained params (cached by config name + every
+    trajectory-relevant knob, see `pretrain_tag`). `optim` overrides the
+    default schedule - e.g. quantized AdamW moments for memory-lean
+    full-backbone pretraining (its lr wins over the `lr` argument)."""
     os.makedirs(cache_dir, exist_ok=True)
-    tag = f"{cfg.name}_s{steps}_b{batch}_q{seq}_seed{seed}"
+    ocfg = optim if optim is not None else OptimCfg(
+        lr=lr, total_steps=steps, warmup_steps=max(steps // 20, 5))
+    tag = pretrain_tag(cfg, steps=steps, batch=batch, seq=seq, lr=ocfg.lr,
+                       mask_rate=mask_rate, seed=seed, optim=ocfg)
     path = os.path.join(cache_dir, tag + ".ckpt")
     if os.path.exists(path):
         tree, _ = load_tree(path)
@@ -78,12 +102,12 @@ def pretrain_encoder(cfg: ModelCfg, *, steps: int = 600, batch: int = 32,
         return restore_into(skeleton, tree)
 
     strat = peft.strategy("full")
-    ocfg = OptimCfg(lr=lr, total_steps=steps, warmup_steps=max(steps // 20, 5))
     state = make_state(jax.random.PRNGKey(seed), cfg, strat, ocfg)
     step = build_train_step(cfg, ocfg, loss_fn=mlm_loss)
     corpus = lm_corpus(cfg.vocab_size, 300_000, seed=seed)
     state, hist = run_train(state, step,
-                            mlm_batches(corpus, steps, batch, seq, seed=seed),
+                            mlm_batches(corpus, steps, batch, seq,
+                                        mask_rate=mask_rate, seed=seed),
                             steps=steps, log_every=0, log=log)
     log(f"[pretrain] {cfg.name}: mlm ce {hist[0]['loss']:.3f} -> "
         f"{hist[-1]['loss']:.3f}")

@@ -58,7 +58,7 @@ def make_state(key, cfg: ModelCfg, strat: peft.Strategy, ocfg: OptimCfg,
         "step": jnp.zeros((), jnp.int32),
         "trainable": trainable,
         "frozen": frozen,
-        "opt": adamw_init(trainable),
+        "opt": adamw_init(trainable, ocfg),
     }
     if ocfg.compress_grads:
         state["err"] = ef_init(trainable)

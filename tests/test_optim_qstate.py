@@ -1,0 +1,303 @@
+"""Quantized AdamW moment storage (repro.optim.qstate): encode/decode,
+bit-exactness of the fp32 path, error-feedback convergence, byte
+accounting, sharding-path resolution, and dtype-faithful checkpoint
+resume of quantized optimizer state.
+"""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from conftest import tiny_cfg
+from repro.checkpoint import CheckpointManager, load_tree, restore_into, save_tree
+from repro.common import tree as tu
+from repro.common.types import OptimCfg
+from repro.configs import PAPER, get as get_cfg
+from repro.core import peft
+from repro.data.synthetic import lm_batches, lm_corpus
+from repro.dist.sharding import opt_state_shardings, param_spec
+from repro.optim import qstate
+from repro.optim.adamw import adamw_init, adamw_update
+from repro.quant.qtensor import is_qtensor
+from repro.train.steps import build_train_step, make_state, merged_params
+
+KEY = jax.random.PRNGKey(0)
+
+
+class FakeMesh:
+    axis_names = ("data", "model")
+    devices = np.empty((4, 8))
+
+
+# ---------------------------------------------------------------------------
+# encode / decode
+# ---------------------------------------------------------------------------
+
+
+def test_check_moment_dtype_rejects_unknown():
+    with pytest.raises(ValueError, match="m_dtype"):
+        qstate.check_moment_dtype("m_dtype", "fp16")
+    with pytest.raises(ValueError, match="v_dtype"):
+        qstate.init_opt_state({"w": jnp.ones((2, 2))},
+                              OptimCfg(v_dtype="int4"))
+
+
+def test_encode_decode_fp32_is_identity():
+    x = jax.random.normal(KEY, (16, 32))
+    stored, err = qstate.encode_moment(x, "float32")
+    assert stored is x and err is None
+    np.testing.assert_array_equal(np.asarray(qstate.decode_moment(stored)),
+                                  np.asarray(x))
+
+
+def test_encode_decode_bf16_and_int8_error_bounds():
+    x = jax.random.normal(KEY, (16, 32)) * 3.0
+    bf, _ = qstate.encode_moment(x, "bfloat16")
+    assert bf.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(qstate.decode_moment(bf)),
+                               np.asarray(x), rtol=1e-2, atol=1e-2)
+
+    q, err = qstate.encode_moment(x, "int8")
+    assert is_qtensor(q) and err is None
+    assert q.values.dtype == jnp.int8 and q.shape == x.shape
+    # symmetric rounding: error bounded by half a grid step per block row
+    step = np.asarray(q.scales)
+    got = np.abs(np.asarray(qstate.decode_moment(q)) - np.asarray(x))
+    assert (got <= 0.51 * step + 1e-7).all()
+
+
+def test_int8_error_feedback_tightens_reconstruction():
+    x = jax.random.normal(KEY, (8, 64)) * 2.0
+    q, err = qstate.encode_moment(x, "int8", ef=True)
+    assert is_qtensor(err)
+    direct = np.abs(np.asarray(q.dequantize()) - np.asarray(x)).max()
+    with_ef = np.abs(np.asarray(qstate.decode_moment(q))
+                     + np.asarray(qstate.decode_moment(err))
+                     - np.asarray(x)).max()
+    # the residual's grid is ~half a moment grid step / 127
+    assert with_ef < 0.05 * direct
+
+
+def test_quantized_moments_predicate():
+    assert not qstate.quantized_moments(OptimCfg())
+    assert qstate.quantized_moments(OptimCfg(v_dtype="int8"))
+    assert qstate.quantized_moments(OptimCfg(m_dtype="bfloat16"))
+
+
+def test_init_opt_state_layout_per_cfg():
+    tr = {"w": jnp.ones((4, 8)), "b": jnp.ones((8,)), "frozen": None}
+    st = qstate.init_opt_state(tr, OptimCfg())
+    assert set(st) == {"m", "v", "count"}
+    assert st["m"]["w"].dtype == jnp.float32 and st["m"]["frozen"] is None
+
+    st = qstate.init_opt_state(tr, OptimCfg(m_dtype="bfloat16",
+                                            v_dtype="bfloat16"))
+    assert set(st) == {"m", "v", "count"}
+    assert st["v"]["w"].dtype == jnp.bfloat16
+
+    st = qstate.init_opt_state(tr, OptimCfg(m_dtype="int8", v_dtype="int8"))
+    assert set(st) == {"m", "v", "count", "m_err", "v_err"}
+    assert is_qtensor(st["m"]["w"]) and is_qtensor(st["v_err"]["w"])
+
+    st = qstate.init_opt_state(tr, OptimCfg(m_dtype="int8", v_dtype="int8",
+                                            qstate_ef=False))
+    assert set(st) == {"m", "v", "count"}
+
+
+# ---------------------------------------------------------------------------
+# update semantics
+# ---------------------------------------------------------------------------
+
+
+def _reference_adamw(grads, state, params, cfg, lr):
+    """Independent textbook AdamW (the bit-exactness oracle)."""
+    count = state["count"] + 1
+    c1 = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+    new_p, new_m, new_v = {}, {}, {}
+    for k in params:
+        g = grads[k].astype(jnp.float32)
+        m = cfg.b1 * state["m"][k] + (1 - cfg.b1) * g
+        v = cfg.b2 * state["v"][k] + (1 - cfg.b2) * jnp.square(g)
+        step = (m / c1) / (jnp.sqrt(v / c2) + cfg.eps)
+        if cfg.weight_decay and params[k].ndim >= 2:
+            step = step + cfg.weight_decay * params[k]
+        new_p[k] = params[k] - lr * step
+        new_m[k], new_v[k] = m, v
+    return new_p, {"m": new_m, "v": new_v, "count": count}
+
+
+def test_fp32_update_bit_exact_with_reference():
+    ks = jax.random.split(KEY, 4)
+    params = {"w": jax.random.normal(ks[0], (8, 16)),
+              "b": jax.random.normal(ks[1], (16,))}
+    grads = {"w": jax.random.normal(ks[2], (8, 16)),
+             "b": jax.random.normal(ks[3], (16,))}
+    cfg = OptimCfg()
+    st = adamw_init(params, cfg)
+    rst = {"m": {k: jnp.zeros_like(v) for k, v in params.items()},
+           "v": {k: jnp.zeros_like(v) for k, v in params.items()},
+           "count": jnp.zeros((), jnp.int32)}
+    p, rp = params, params
+    for _ in range(4):
+        p, st = adamw_update(grads, st, p, cfg, 1e-2)
+        rp, rst = _reference_adamw(grads, rst, rp, cfg, 1e-2)
+    for k in params:
+        np.testing.assert_array_equal(np.asarray(p[k]), np.asarray(rp[k]),
+                                      err_msg=k)
+        np.testing.assert_array_equal(np.asarray(st["m"][k]),
+                                      np.asarray(rst["m"][k]), err_msg=k)
+
+
+def test_int8_ef_moments_converge_close_to_fp32():
+    """A quadratic descent trajectory with all-int8 moments + error
+    feedback must land where the fp32 optimizer lands."""
+    target = np.asarray(jax.random.normal(KEY, (16, 32))) * 0.5
+
+    def run(ocfg):
+        p = {"w": jnp.zeros((16, 32))}
+        st = adamw_init(p, ocfg)
+
+        @jax.jit
+        def step(p, st):
+            g = {"w": 2.0 * (p["w"] - target)}
+            return adamw_update(g, st, p, ocfg, 5e-2)
+
+        for _ in range(200):
+            p, st = step(p, st)
+        return np.asarray(p["w"])
+
+    base = OptimCfg(weight_decay=0.0)
+    got_fp32 = run(base)
+    got_q = run(OptimCfg(weight_decay=0.0, m_dtype="int8", v_dtype="int8",
+                         qstate_ef=True))
+    np.testing.assert_allclose(got_fp32, target, atol=1e-2)
+    np.testing.assert_allclose(got_q, got_fp32, atol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# bytes / sharding
+# ---------------------------------------------------------------------------
+
+
+def test_full_backbone_bytes_ratio():
+    cfg = PAPER["bert-tiny"]()
+    oc = OptimCfg(m_dtype="int8", v_dtype="int8", qstate_ef=False)
+    state = make_state(KEY, cfg, peft.strategy("full"), oc)
+    s = qstate.state_summary(state["opt"], oc)
+    assert s["n_params"] > 0
+    assert s["ratio"] >= 3.0, s  # the optim_bench gate, statically
+
+    oc2 = OptimCfg(m_dtype="bfloat16", v_dtype="bfloat16")
+    s2 = qstate.state_summary(
+        make_state(KEY, cfg, peft.strategy("full"), oc2)["opt"], oc2)
+    assert 1.9 <= s2["ratio"] <= 2.1, s2
+
+
+def test_opt_state_paths_resolve_param_rules():
+    """Moment leaves under m/ v/ (+err) prefixes resolve against the
+    tracked parameter's own sharding rule; QTensor values mirror the leaf,
+    scales drop 'model' on the collapsed block dim; adapters replicated."""
+    cfg = get_cfg("qwen3-0.6b")
+    mesh = FakeMesh()
+    assert param_spec("m/blocks/g0/slot0/attn/wq/values",
+                      (28, 1024, 2048), cfg, mesh) == P(None, None, "model")
+    assert param_spec("v_err/blocks/g0/slot0/attn/wq/values",
+                      (28, 1024, 2048), cfg, mesh) == P(None, None, "model")
+    assert param_spec("m/blocks/g0/slot0/attn/wq/scales",
+                      (28, 1024, 1), cfg, mesh) == P(None, None, None)
+    assert param_spec("v/blocks/g0/slot0/adapter/w/values",
+                      (28, 1024), cfg, mesh) == P()
+    assert param_spec("count", (), cfg, mesh) == P()
+
+
+def test_opt_state_shardings_covers_quantized_state():
+    """End-to-end on a real (1,1) mesh: every component of a quantized
+    opt state gets a NamedSharding (structure matches, QTensors split
+    into values/scales entries)."""
+    from jax.sharding import Mesh, NamedSharding
+
+    cfg = tiny_cfg()
+    oc = OptimCfg(m_dtype="bfloat16", v_dtype="int8")
+    state = make_state(KEY, cfg, peft.strategy("full"), oc)
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    sh = opt_state_shardings(state["opt"], cfg, mesh)
+    flat = dict(tu.flatten_with_paths(sh))
+    want = dict(tu.flatten_with_paths(state["opt"]))
+    assert set(flat) == set(want)
+    assert all(isinstance(v, NamedSharding) for v in flat.values())
+
+
+# ---------------------------------------------------------------------------
+# checkpointing (satellite: dtype-faithful round trip + bit-exact resume)
+# ---------------------------------------------------------------------------
+
+
+def test_quantized_opt_state_checkpoint_dtype_faithful(tmp_path):
+    oc = OptimCfg(m_dtype="bfloat16", v_dtype="int8", qstate_ef=True)
+    tr = {"w": jax.random.normal(KEY, (8, 16))}
+    st = adamw_init(tr, oc)
+    _, st = adamw_update({"w": jnp.ones((8, 16))}, st, tr, oc, 1e-3)
+
+    path = str(tmp_path / "opt.ckpt")
+    save_tree(path, st)
+    loaded, _ = load_tree(path)
+    # on-disk form reassembles QTensors, no fp32 detour
+    assert is_qtensor(loaded["v"]["w"])
+    assert loaded["v"]["w"].values.dtype == np.int8
+    assert loaded["m"]["w"].dtype == np.dtype("bfloat16")
+
+    skel = adamw_init(tr, oc)  # same-cfg skeleton: dtypes already right
+    restored = dict(tu.flatten_with_paths(restore_into(skel, loaded)))
+    for pth, leaf in tu.flatten_with_paths(st):
+        got = restored[pth]
+        assert got.dtype == leaf.dtype, pth
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(leaf),
+                                      err_msg=pth)
+
+
+def test_resume_with_quantized_moments_bit_identical():
+    """4 straight steps == 2 steps + checkpoint + restore + 2 steps, for a
+    full-backbone run with bf16 m / int8 v moments (params AND moments)."""
+    cfg = tiny_cfg()
+    strat = peft.strategy("full")
+    ocfg = OptimCfg(lr=1e-3, total_steps=4, m_dtype="bfloat16",
+                    v_dtype="int8", qstate_ef=True)
+    corpus = lm_corpus(cfg.vocab_size, 5000, seed=1)
+
+    def batches():
+        return lm_batches(corpus, 4, 4, 16, seed=2)
+
+    step = jax.jit(build_train_step(cfg, ocfg))
+
+    state = make_state(KEY, cfg, strat, ocfg)
+    for b in batches():
+        state, _ = step(state, b)
+    want_p, want_opt = merged_params(state), state["opt"]
+
+    with tempfile.TemporaryDirectory() as td:
+        mgr = CheckpointManager(td, keep=2)
+        st2 = make_state(KEY, cfg, strat, ocfg)
+        it = batches()
+        for _ in range(2):
+            st2, _ = step(st2, next(it))
+        mgr.save(2, st2)
+        del st2
+
+        restored, meta = mgr.restore()
+        assert meta["step"] == 2
+        st3 = restore_into(make_state(KEY, cfg, strat, ocfg), restored)
+        for _ in range(2):
+            st3, _ = step(st3, next(it))
+        got_p, got_opt = merged_params(st3), st3["opt"]
+
+    for tree_a, tree_b in ((want_p, got_p), (want_opt, got_opt)):
+        for (pa, va), (pb, vb) in zip(tu.flatten_with_paths(tree_a),
+                                      tu.flatten_with_paths(tree_b)):
+            assert pa == pb
+            np.testing.assert_array_equal(np.asarray(va), np.asarray(vb),
+                                          err_msg=pa)

@@ -407,3 +407,40 @@ def test_paged_scheduler_fuzz_windowed_cold_lane():
         np.testing.assert_array_equal(wc.tokens, c.tokens)
         assert wc.finish_reason == c.finish_reason
     assert sched.pool_report()["live_blocks"] == 0
+
+
+# ---------------------------------------------------------------------------
+# sampling temperature validation (temperature=0 means greedy, not 1e6x)
+# ---------------------------------------------------------------------------
+
+
+def test_temperature_zero_decodes_greedily():
+    """temperature=0 with top_k set must reproduce the greedy continuation
+    exactly (it used to be clamped to 1e-6, turning the logits into a 1e6x
+    blow-up instead of the argmax the caller asked for)."""
+    from repro.serving.engine import sample_greedy, sample_topk
+
+    eng, _ = _engine()
+    toks = np.asarray(jax.random.randint(KEY, (3, 8), 0, 97))
+    want = eng.generate(toks, 5)  # greedy oracle
+
+    sched = make_scheduler(eng, ServingConfig(num_slots=2, max_len=20))
+    done, _ = sched.run(
+        [Request(prompt=toks[i], max_new_tokens=5, top_k=40,
+                 temperature=0.0, seed=7 + i) for i in range(3)])
+    for i, c in enumerate(done):
+        np.testing.assert_array_equal(c.tokens, want[i], err_msg=f"req{i}")
+
+    logits = jax.random.normal(KEY, (2, 4, 97))
+    np.testing.assert_array_equal(
+        np.asarray(sample_topk(logits, KEY, 40, temperature=0.0)),
+        np.asarray(sample_greedy(logits)))
+
+
+def test_submit_rejects_invalid_temperature():
+    eng, _ = _engine()
+    sched = make_scheduler(eng, ServingConfig(num_slots=1, max_len=16))
+    for bad in (-1.0, float("nan"), float("inf")):
+        with pytest.raises(ValueError, match="temperature"):
+            sched.submit(Request(prompt=np.zeros(2, np.int32),
+                                 max_new_tokens=2, temperature=bad))
