@@ -26,7 +26,7 @@ def main() -> None:
     ap.add_argument("--only", default="",
                     help="comma-separated subset of: table2,table3,table4,"
                          "table5,fig5,kernels,roofline,swap,quant,sparse,"
-                         "paged,spec,optim")
+                         "paged,spec,optim,obs")
     ap.add_argument("--json", default="",
                     help="write rows as JSON: {suites: {name: [{name, "
                          "us_per_call, derived}]}} plus run metadata")
@@ -36,11 +36,11 @@ def main() -> None:
 
     import jax
 
-    from benchmarks import (common, fig5_patterns, kernel_bench, optim_bench,
-                            paged_bench, quant_bench, roofline, sparse_bench,
-                            spec_bench, swap_churn, table2_two_stage,
-                            table3_param_counts, table4_module_ablation,
-                            table5_layer_sweep)
+    from benchmarks import (common, fig5_patterns, kernel_bench, obs_bench,
+                            optim_bench, paged_bench, quant_bench, roofline,
+                            sparse_bench, spec_bench, swap_churn,
+                            table2_two_stage, table3_param_counts,
+                            table4_module_ablation, table5_layer_sweep)
 
     suites = [
         ("table3", table3_param_counts.run),   # fast + exact: run first
@@ -51,6 +51,7 @@ def main() -> None:
         ("paged", paged_bench.run),
         ("spec", spec_bench.run),
         ("optim", optim_bench.run),
+        ("obs", obs_bench.run),
         ("roofline", roofline.run),
         ("table2", table2_two_stage.run),
         ("table4", table4_module_ablation.run),

@@ -20,6 +20,7 @@ from repro.kernels.multitask import multitask_hadamard_tpu
 from repro.kernels.quant import dequant_matmul_tpu
 from repro.kernels.rwkv6 import wkv6_tpu
 from repro.kernels.sparse import masked_multitask_hadamard_tpu
+from repro.obs.profile import scope
 
 
 def _on_tpu() -> bool:
@@ -32,6 +33,7 @@ def _resolve(impl: str) -> str:
     return "pallas" if _on_tpu() else "jnp"
 
 
+@scope("repro.hadamard")
 def hadamard(x, w, b, impl: str = "auto"):
     impl = _resolve(impl)
     if impl == "jnp":
@@ -39,6 +41,7 @@ def hadamard(x, w, b, impl: str = "auto"):
     return hadamard_affine(x, w, b, impl == "interpret")
 
 
+@scope("repro.fused_adapter_norm")
 def fused_adapter_norm(x, res, w, b, scale, bias=None, eps: float = 1e-6,
                        impl: str = "auto"):
     impl = _resolve(impl)
@@ -49,6 +52,7 @@ def fused_adapter_norm(x, res, w, b, scale, bias=None, eps: float = 1e-6,
                                        interpret=impl == "interpret")
 
 
+@scope("repro.flash_attention")
 def flash_attention(q, k, v, causal: bool = True, window: Optional[int] = None,
                     scale: Optional[float] = None, cap: float = 0.0,
                     impl: str = "auto", **tiles):
@@ -65,6 +69,7 @@ def flash_attention(q, k, v, causal: bool = True, window: Optional[int] = None,
                                interpret=impl == "interpret", **tiles)
 
 
+@scope("repro.paged_attention")
 def paged_attention(q, k_pool, v_pool, tables, kv_lens,
                     window: Optional[int] = None,
                     scale: Optional[float] = None, cap: float = 0.0,
@@ -90,6 +95,7 @@ def paged_attention(q, k_pool, v_pool, tables, kv_lens,
                                interpret=impl == "interpret")
 
 
+@scope("repro.wkv6")
 def wkv6(r, k, v, w, u, impl: str = "auto", chunk: int = 64):
     impl = _resolve(impl)
     if impl == "jnp":
@@ -97,6 +103,7 @@ def wkv6(r, k, v, w, u, impl: str = "auto", chunk: int = 64):
     return wkv6_tpu(r, k, v, w, u, chunk=chunk, interpret=impl == "interpret")
 
 
+@scope("repro.dequant_matmul")
 def dequant_matmul(x, values, scales, impl: str = "auto"):
     """x @ dequant(values, scales) without an fp32 weight materialization.
 
@@ -111,6 +118,7 @@ def dequant_matmul(x, values, scales, impl: str = "auto"):
     return dequant_matmul_tpu(x, values, scales, impl == "interpret")
 
 
+@scope("repro.multitask_hadamard")
 def multitask_hadamard(x, w_bank, b_bank, task_ids, impl: str = "auto"):
     impl = _resolve(impl)
     if impl == "jnp":
@@ -119,6 +127,7 @@ def multitask_hadamard(x, w_bank, b_bank, task_ids, impl: str = "auto"):
                                   interpret=impl == "interpret")
 
 
+@scope("repro.masked_multitask_hadamard")
 def masked_multitask_hadamard(x, w_bank, b_bank, gate, task_ids,
                               impl: str = "auto"):
     """Redundancy-aware bank serving (repro.sparse): per-row gate in

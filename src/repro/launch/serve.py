@@ -45,9 +45,11 @@ from repro.core.hadamard import extract_delta, perturb_adapters
 from repro.dist.api import use_mesh
 from repro.launch.mesh import parse_mesh
 from repro.models import model as M
+from repro.obs import (JsonlSink, MetricsRegistry, ProfiledTicks,
+                       write_snapshot)
 from repro.serving import (AdapterBank, AdapterRegistry, MultiTaskEngine,
                            Request, Scheduler, ServeEngine, ServingConfig,
-                           make_scheduler)
+                           format_report, make_scheduler)
 
 
 def build_params(key, cfg, tasks: int, share_w: bool = False):
@@ -145,6 +147,24 @@ def main():
                         "row-set and per-tenant inserts scatter only b - "
                         "T tenants cost (T+1) row-sets instead of 2T. "
                         "Requires --adapter-dir")
+
+    g = ap.add_argument_group("observability (repro.obs)")
+    g.add_argument("--metrics-every", type=int, default=0,
+                   help=">0: print a one-line metrics digest every N "
+                        "scheduler ticks")
+    g.add_argument("--metrics-file", default="",
+                   help="write the final MetricsRegistry snapshot here "
+                        "(JSON; a .prom suffix writes Prometheus text "
+                        "exposition instead)")
+    g.add_argument("--events-file", default="",
+                   help="append structured events (retraces, bank "
+                        "evictions/pin stalls, stragglers) as JSONL here")
+    g.add_argument("--profile-dir", default="",
+                   help="capture a JAX profiler trace of the first "
+                        "--profile-ticks scheduler ticks into this "
+                        "directory (TensorBoard/Perfetto-loadable)")
+    g.add_argument("--profile-ticks", type=int, default=8,
+                   help="scheduler ticks the --profile-dir capture spans")
 
     g = ap.add_argument_group("engine / sampling")
     g.add_argument("--top-k", type=int, default=0,
@@ -300,6 +320,13 @@ def main():
     draft_model = None
     if args.spec_k and args.spec_draft == "model":
         draft_model = (cfg, base)  # the untuned base checkpoint drafts
+    # one registry for the whole serve: every scheduler/bank/cache series,
+    # the per-request tracer, and any attached exporters report into it
+    obs = MetricsRegistry()
+    events_sink = None
+    if args.events_file:
+        events_sink = JsonlSink(args.events_file)
+        obs.add_sink(events_sink)
     try:
         serve_cfg = ServingConfig(
             num_slots=args.num_slots, max_len=max_len, paged=paged,
@@ -309,9 +336,28 @@ def main():
             spec_k=args.spec_k, spec_draft=args.spec_draft,
             backbone_quant=quant, prefill_bucket=bucket, top_k=args.top_k,
             stream=stream)
-        sched = make_scheduler(engine, serve_cfg, draft_model=draft_model)
+        sched = make_scheduler(engine, serve_cfg, draft_model=draft_model,
+                               obs=obs)
     except ValueError as e:
         raise SystemExit(str(e))
+
+    prof = (ProfiledTicks(args.profile_dir, n=args.profile_ticks)
+            if args.profile_dir else None)
+
+    def step_once():
+        """One scheduler tick plus the launcher-side obs hooks."""
+        sched.step()
+        if prof is not None:
+            prof.tick()
+        if (args.metrics_every and sched._ticks
+                and sched._ticks % args.metrics_every == 0):
+            snap = obs.snapshot()
+            tok = sum(v for k, v in snap["counters"].items()
+                      if k.startswith("serve_tokens_total"))
+            print(f"[obs] tick {sched._ticks}: {tok} tokens emitted, "
+                  f"{sched.active} active, {sched.pending} queued, "
+                  f"{snap['events_by_kind'].get('retrace', 0)} retrace "
+                  "events", flush=True)
     if paged:
         print(f"paged KV: {sched.alloc.num_blocks - 1} x "
               f"{args.page_size}-token blocks"
@@ -331,7 +377,7 @@ def main():
         t0 = time.perf_counter()
         ids = [sched.submit(r) for r in early]
         while sched.pending or sched.active or late:
-            sched.step()
+            step_once()
             if late and len(sched.completions) * 2 >= len(early):
                 registry.publish(hot, task_delta(variants[-1]))
                 print(f"  ++ runtime add: published {hot!r}, submitting "
@@ -340,13 +386,9 @@ def main():
                 late = []
         elapsed = time.perf_counter() - t0
         done = [sched.completions.pop(i) for i in ids]
-        n_tok = sum(len(c.tokens) for c in done)
-        report = {"requests": len(done), "tokens": n_tok,
-                  "elapsed_s": elapsed, "ticks": sched._ticks,
-                  "requests_per_s": len(done) / elapsed,
-                  "tokens_per_s": n_tok / elapsed,
-                  "mean_ttft_s": sum(c.ttft_s for c in done) / len(done),
-                  "mean_latency_s": sum(c.latency_s for c in done) / len(done)}
+        # the scheduler's own report (quantiles included) - the launcher
+        # no longer recomputes throughput/latency on the side
+        report = sched.report(done, elapsed, ticks=sched._ticks)
         # runtime remove: retire the first tenant - future loads fail,
         # its device row is freed for the next miss
         victim = "task0"
@@ -361,7 +403,13 @@ def main():
               + (" (shared-w: one w row-set for all tenants)"
                  if bank["shared_w"] else ""))
     else:
-        done, report = sched.run(requests)
+        t0 = time.perf_counter()
+        ids = [sched.submit(r) for r in requests]
+        while sched.pending or sched.active:
+            step_once()
+        elapsed = time.perf_counter() - t0
+        done = [sched.completions.pop(i) for i in ids]
+        report = sched.report(done, elapsed, ticks=sched._ticks)
 
     for c in done:
         who = c.adapter if c.adapter is not None else f"task{c.task_id}"
@@ -371,10 +419,8 @@ def main():
     print(f"served {report['requests']} requests / {report['tokens']} tokens "
           f"in {report['elapsed_s']:.2f}s over {report['ticks']} ticks "
           f"({args.num_slots} slots)")
-    print(f"throughput: {report['requests_per_s']:.1f} req/s, "
-          f"{report['tokens_per_s']:.1f} tok/s; "
-          f"mean ttft {report['mean_ttft_s'] * 1e3:.0f}ms, "
-          f"mean latency {report['mean_latency_s'] * 1e3:.0f}ms")
+    print("scheduler report:")
+    print(format_report(report))
     if args.spec_k:
         st = sched.spec_stats
         print(f"speculation: {st['accepted']}/{st['drafted']} drafts "
@@ -386,6 +432,19 @@ def main():
               f"{pr['prefix_full_entries']} cached prompts; "
               f"{pr['full_hits']} full / {pr['partial_hits']} partial "
               f"prefix hits, {pr['cold']} cold prefills")
+
+    n_retrace = len(obs.events_of("retrace"))
+    if n_retrace:
+        print(f"WARNING: {n_retrace} mid-serve retrace event(s) - see "
+              "--events-file for details")
+    if prof is not None:
+        prof.stop()
+        print(f"profiler trace -> {args.profile_dir}")
+    if args.metrics_file:
+        write_snapshot(obs, args.metrics_file)
+        print(f"metrics snapshot -> {args.metrics_file}")
+    if events_sink is not None:
+        events_sink.close()
 
 
 if __name__ == "__main__":

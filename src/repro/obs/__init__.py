@@ -1,0 +1,23 @@
+"""repro.obs: unified metrics, per-request tracing, and profiling hooks.
+
+The serving stack (continuous batching, paged KV + prefix sharing,
+speculative decoding, multi-tenant adapter banks) and the training loop
+report through one `MetricsRegistry`: labeled counters/gauges/histograms
+with p50/p95/p99, structured events (retraces, bank pressure), per-
+request lifecycle trace spans, JSONL/Prometheus/JSON exporters, and JAX
+profiler capture helpers. See the README "Observability" section for the
+metric catalog and schemas.
+"""
+from repro.obs.export import JsonlSink, render_prometheus, write_snapshot
+from repro.obs.metrics import (DEFAULT_BUCKETS, Counter, Gauge, Histogram,
+                               MetricsRegistry, format_key)
+from repro.obs.profile import (ProfiledTicks, annotate, profiler_trace,
+                               scope)
+from repro.obs.trace import NULL_TRACE, RequestTrace, RequestTracer
+
+__all__ = [
+    "Counter", "DEFAULT_BUCKETS", "Gauge", "Histogram", "JsonlSink",
+    "MetricsRegistry", "NULL_TRACE", "ProfiledTicks", "RequestTrace",
+    "RequestTracer", "annotate", "format_key", "profiler_trace",
+    "render_prometheus", "scope", "write_snapshot",
+]

@@ -1,0 +1,98 @@
+"""Profiling hooks: kernel-level scopes and whole-program trace capture.
+
+Two layers:
+
+  * `scope(name)` / `annotate(name)` - cheap annotations. `scope` is
+    `jax.named_scope`: applied at trace time inside jitted code, it names
+    the enclosed ops in HLO and in profiler timelines (the Pallas
+    hadamard / paged-attention / dequant-matmul dispatches in
+    `repro.kernels.ops` are wrapped with it, so a captured trace
+    attributes device time to the kernel that spent it). `annotate` is a
+    host-side `jax.profiler.TraceAnnotation` region for Python-level
+    phases (a scheduler tick, an admission) - a no-op unless a capture is
+    running.
+  * `profiler_trace(log_dir)` / `ProfiledTicks` - capture. The context
+    manager brackets a region with `jax.profiler.start_trace/stop_trace`
+    (TensorBoard-loadable, includes HLO + annotations). `ProfiledTicks`
+    is the `launch/serve --profile-dir` hook: start capture now, stop
+    after N scheduler ticks, tolerate the serve draining earlier.
+
+Everything here degrades to a no-op if the installed jax lacks the
+profiler surface (minimal CPU builds): serving must never fail because
+profiling could not start.
+"""
+from __future__ import annotations
+
+import contextlib
+import warnings
+
+import jax
+
+
+def scope(name: str):
+    """Trace-time scope: names enclosed ops in HLO/profiles. Usable both
+    as a context manager and (via jax.named_scope semantics) a decorator."""
+    return jax.named_scope(name)
+
+
+def annotate(name: str):
+    """Host-side profiler annotation region (no-op outside a capture)."""
+    try:
+        return jax.profiler.TraceAnnotation(name)
+    except Exception:  # pragma: no cover - profiler-less build
+        return contextlib.nullcontext()
+
+
+@contextlib.contextmanager
+def profiler_trace(log_dir: str):
+    """Capture a JAX profiler trace of the enclosed region into
+    `log_dir` (view with TensorBoard's profile plugin or Perfetto)."""
+    started = False
+    try:
+        jax.profiler.start_trace(log_dir)
+        started = True
+    except Exception as e:  # pragma: no cover - profiler-less build
+        warnings.warn(f"profiler trace not started: {e}")
+    try:
+        yield
+    finally:
+        if started:
+            jax.profiler.stop_trace()
+
+
+class ProfiledTicks:
+    """Capture a profiler trace spanning the next `n` scheduler ticks.
+
+    Usage (launch/serve --profile-dir):
+
+        prof = ProfiledTicks(log_dir, n=8)
+        while driving:
+            sched.step()
+            prof.tick()
+        prof.stop()  # idempotent; stops early if the serve drained first
+    """
+
+    def __init__(self, log_dir: str, n: int = 8):
+        self.log_dir = log_dir
+        self.remaining = max(1, int(n))
+        self._started = False
+        self._stopped = False
+        try:
+            jax.profiler.start_trace(log_dir)
+            self._started = True
+        except Exception as e:  # pragma: no cover - profiler-less build
+            warnings.warn(f"profiler trace not started: {e}")
+            self._stopped = True
+
+    def tick(self) -> None:
+        """Count one scheduler tick; stops the capture at zero."""
+        if self._stopped:
+            return
+        self.remaining -= 1
+        if self.remaining <= 0:
+            self.stop()
+
+    def stop(self) -> None:
+        if self._started and not self._stopped:
+            jax.profiler.stop_trace()
+        self._stopped = True

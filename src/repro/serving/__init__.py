@@ -11,12 +11,13 @@ from repro.serving.config import ServingConfig, make_scheduler
 from repro.serving.engine import MultiTaskEngine, ServeEngine
 from repro.serving.paged import BlockPoolFullError, PagedScheduler
 from repro.serving.registry import AdapterBank, AdapterRegistry, BankFullError
-from repro.serving.scheduler import Completion, Request, Scheduler
+from repro.serving.scheduler import (Completion, Request, Scheduler,
+                                     format_report)
 from repro.serving.spec import DraftLane, SpecPagedScheduler, SpecScheduler
 
 __all__ = [
     "AdapterBank", "AdapterRegistry", "BankFullError", "BlockPoolFullError",
     "Completion", "DraftLane", "MultiTaskEngine", "PagedScheduler",
     "Request", "Scheduler", "ServeEngine", "ServingConfig",
-    "SpecPagedScheduler", "SpecScheduler", "make_scheduler",
+    "SpecPagedScheduler", "SpecScheduler", "format_report", "make_scheduler",
 ]

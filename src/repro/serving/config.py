@@ -119,12 +119,17 @@ def _auto_blocks(config: ServingConfig) -> int:
     return 1 + config.num_slots * per_slot * 3 // 2
 
 
-def make_scheduler(engine, config: ServingConfig, *, draft_model=None):
+def make_scheduler(engine, config: ServingConfig, *, draft_model=None,
+                   obs=None):
     """Build the scheduler `config` describes around `engine`.
 
     draft_model: (cfg, params) for spec_draft='model'; forbidden
     otherwise (a silently ignored draft model would mask a config
     mistake).
+
+    obs: a `repro.obs.MetricsRegistry` the scheduler should report into
+    (launchers pass the one their exporters are attached to); None gives
+    the scheduler a private registry, reachable as `sched.obs`.
     """
     if config.backbone_quant is not None \
             and getattr(engine, "quant", None) != config.backbone_quant:
@@ -158,12 +163,14 @@ def make_scheduler(engine, config: ServingConfig, *, draft_model=None):
                 page=config.page_size, max_len=config.max_len,
                 spec_k=config.spec_k, draft=draft,
                 kv_quant=config.kv_quant, prefix_cache=config.prefix_cache,
-                stream=config.stream, prefill_bucket=config.prefill_bucket)
+                stream=config.stream, prefill_bucket=config.prefill_bucket,
+                obs=obs)
         return PagedScheduler(
             engine, num_slots=config.num_slots, num_blocks=num_blocks,
             page=config.page_size, max_len=config.max_len,
             kv_quant=config.kv_quant, prefix_cache=config.prefix_cache,
-            stream=config.stream, prefill_bucket=config.prefill_bucket)
+            stream=config.stream, prefill_bucket=config.prefill_bucket,
+            obs=obs)
 
     from repro.serving.scheduler import Scheduler
     from repro.serving.spec import SpecScheduler
@@ -172,7 +179,7 @@ def make_scheduler(engine, config: ServingConfig, *, draft_model=None):
         return SpecScheduler(
             engine, num_slots=config.num_slots, max_len=config.max_len,
             spec_k=config.spec_k, draft=draft, stream=config.stream,
-            prefill_bucket=config.prefill_bucket)
+            prefill_bucket=config.prefill_bucket, obs=obs)
     return Scheduler(
         engine, num_slots=config.num_slots, max_len=config.max_len,
-        stream=config.stream, prefill_bucket=config.prefill_bucket)
+        stream=config.stream, prefill_bucket=config.prefill_bucket, obs=obs)

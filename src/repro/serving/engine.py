@@ -81,43 +81,55 @@ class ServeEngine:
         self.cfg = cfg
         self.mesh = current_mesh()
         self.params = self._place(params)
-        self._prefill = jax.jit(
-            lambda p, toks, cl: M.prefill_lm(p, cfg, toks, cache_len=cl),
-            static_argnums=(2,),
-        )
-        self._prefill_at = jax.jit(
-            lambda p, toks, cl, lp: M.prefill_lm(p, cfg, toks, cache_len=cl,
-                                                 last_pos=lp),
-            static_argnums=(2,),
-        )
-        self._decode = jax.jit(
-            lambda p, caches, tok, pos: M.decode_lm(p, cfg, caches, tok, pos),
-            donate_argnums=(1,),
-        )
+        # Each jitted fn bumps trace_counts when its python body runs (i.e.
+        # on compile), so schedulers can detect mid-serve retraces - same
+        # protocol as MultiTaskEngine. The closures bind the DICT, not the
+        # attribute: MultiTaskEngine replaces self.trace_counts with its own
+        # dict for the task-gather jits, and these legacy lock-step jits
+        # must not leak compiles into that one (its contract is one count
+        # per scheduler-tick shape, asserted by the registry/sparse tests).
+        self.trace_counts = {"prefill": 0, "decode": 0, "decode_paged": 0,
+                             "verify": 0, "verify_paged": 0}
+        tc = self.trace_counts
+
+        def _pf(p, toks, cl):
+            tc["prefill"] += 1
+            return M.prefill_lm(p, cfg, toks, cache_len=cl)
+
+        def _pfat(p, toks, cl, lp):
+            tc["prefill"] += 1
+            return M.prefill_lm(p, cfg, toks, cache_len=cl, last_pos=lp)
+
+        def _dc(p, caches, tok, pos):
+            tc["decode"] += 1
+            return M.decode_lm(p, cfg, caches, tok, pos)
+
         # -- paged-pool variants (serving/paged.py). The pool tree is the
         # single largest live allocation, so every mutation donates it.
-        self._decode_paged = jax.jit(
-            lambda p, pool, tok, pos, tbl: M.decode_lm_paged(
-                p, cfg, pool, tok, pos, tbl),
-            donate_argnums=(1,),
-        )
-        self._extend = jax.jit(
-            lambda p, pool, toks, tbl, start, kvl, lp: M.extend_lm(
-                p, cfg, pool, toks, tbl, start, kvl, lp),
-            donate_argnums=(1,),
-        )
+        def _pdc(p, pool, tok, pos, tbl):
+            tc["decode_paged"] += 1
+            return M.decode_lm_paged(p, cfg, pool, tok, pos, tbl)
+
+        def _pext(p, pool, toks, tbl, start, kvl, lp):
+            return M.extend_lm(p, cfg, pool, toks, tbl, start, kvl, lp)
+
         # -- speculative verify: score k+1 tokens per row in ONE forward
         # (serving/spec.py). Same donation discipline as decode.
-        self._verify = jax.jit(
-            lambda p, caches, toks, pos: M.verify_lm(p, cfg, caches, toks,
-                                                     pos),
-            donate_argnums=(1,),
-        )
-        self._verify_paged = jax.jit(
-            lambda p, pool, toks, pos, tbl: M.verify_lm_paged(
-                p, cfg, pool, toks, pos, tbl),
-            donate_argnums=(1,),
-        )
+        def _vf(p, caches, toks, pos):
+            tc["verify"] += 1
+            return M.verify_lm(p, cfg, caches, toks, pos)
+
+        def _vfp(p, pool, toks, pos, tbl):
+            tc["verify_paged"] += 1
+            return M.verify_lm_paged(p, cfg, pool, toks, pos, tbl)
+
+        self._prefill = jax.jit(_pf, static_argnums=(2,))
+        self._prefill_at = jax.jit(_pfat, static_argnums=(2,))
+        self._decode = jax.jit(_dc, donate_argnums=(1,))
+        self._decode_paged = jax.jit(_pdc, donate_argnums=(1,))
+        self._extend = jax.jit(_pext, donate_argnums=(1,))
+        self._verify = jax.jit(_vf, donate_argnums=(1,))
+        self._verify_paged = jax.jit(_vfp, donate_argnums=(1,))
         self._paged_insert_jit = jax.jit(self._paged_insert_impl,
                                          donate_argnums=(0,))
         self._copy_block_jit = jax.jit(self._copy_block_impl,

@@ -42,6 +42,7 @@ restricted to full-attention configs).
 """
 from __future__ import annotations
 
+import time
 from collections import OrderedDict, deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
@@ -50,6 +51,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import MetricsRegistry
 from repro.serving.registry import BankFullError
 from repro.serving.scheduler import Completion, Request, Scheduler, _Slot
 
@@ -120,18 +122,30 @@ class PrefixCache:
     pin the most blocks - then LRU `blocks` entries.
     """
 
-    def __init__(self):
+    def __init__(self, obs: Optional[MetricsRegistry] = None):
         self.blocks: "OrderedDict[tuple, int]" = OrderedDict()
         self.full: "OrderedDict[tuple, Tuple[Tuple[int, ...], np.ndarray]]" \
             = OrderedDict()
-        self.hits_full = 0
-        self.hits_partial = 0
+        # the cache's own match counters ARE the hit metrics - the
+        # scheduler reads them back instead of double-counting
+        obs = obs if obs is not None else MetricsRegistry()
+        self._c_full = obs.counter("serve_prefix_hits_total", tier="full")
+        self._c_partial = obs.counter("serve_prefix_hits_total",
+                                      tier="partial")
+
+    @property
+    def hits_full(self) -> int:
+        return self._c_full.value
+
+    @property
+    def hits_partial(self) -> int:
+        return self._c_partial.value
 
     def match_full(self, akey, S: int, h_all: int):
         ent = self.full.get((akey, S, h_all))
         if ent is not None:
             self.full.move_to_end((akey, S, h_all))
-            self.hits_full += 1
+            self._c_full.inc()
         return ent
 
     def match_prefix(self, akey, hashes: List[int]) -> List[int]:
@@ -144,7 +158,7 @@ class PrefixCache:
             self.blocks.move_to_end((akey, h))
             out.append(bid)
         if out:
-            self.hits_partial += 1
+            self._c_partial.inc()
         return out
 
     def insert_block(self, alloc: BlockAllocator, akey, h: int, bid: int):
@@ -206,10 +220,13 @@ class PagedScheduler(Scheduler):
     admission prefills cold) without touching the paging itself.
     """
 
+    _sched_kind = "paged"
+
     def __init__(self, engine, *, num_slots: int, num_blocks: int, page: int,
                  max_len: int, kv_quant: Optional[str] = None,
                  prefix_cache: bool = True, stream=None,
-                 prefill_bucket: Optional[int] = None):
+                 prefill_bucket: Optional[int] = None,
+                 obs: Optional[MetricsRegistry] = None):
         if num_slots < 1:
             raise ValueError("num_slots must be >= 1")
         if page < 1 or max_len % page != 0:
@@ -241,13 +258,25 @@ class PagedScheduler(Scheduler):
         self.page = page
         self.nb_max = max_len // page
         self.kv_quant = kv_quant
+        self._init_obs(obs)  # before PrefixCache: its counters land here
         self._windowed = any(s.window is not None
                              for g in cfg.groups for s in g.slots)
         # ring caches fold positions into a modular layout - block content
         # depends on the full trajectory, not the prefix, so sharing and
         # extend are full-attention-only; windowed configs run cold.
         self.prefix: Optional[PrefixCache] = (
-            PrefixCache() if prefix_cache and not self._windowed else None)
+            PrefixCache(obs=self.obs) if prefix_cache and not self._windowed
+            else None)
+        self._c_cold = self.obs.counter("serve_prefix_hits_total",
+                                        tier="cold")
+        self._g_free_blocks = self.obs.gauge("kv_free_blocks")
+        self._g_reserved_blocks = self.obs.gauge("kv_reserved_blocks")
+        self.obs.add_derived(
+            "prefix_hit_ratio_full",
+            lambda: self._prefix_hit_ratio("full_hits"))
+        self.obs.add_derived(
+            "prefix_hit_ratio_partial",
+            lambda: self._prefix_hit_ratio("partial_hits"))
         self.alloc = BlockAllocator(num_blocks)
         self.pool = engine.init_paged_pool(num_blocks, page, kv_quant)
         self.tables = np.zeros((num_slots, self.nb_max), np.int32)
@@ -267,7 +296,22 @@ class PagedScheduler(Scheduler):
         self._tok = np.zeros((num_slots,), np.int32)
         self._pos = np.zeros((num_slots,), np.int32)
         self._task = np.zeros((num_slots,), np.int32)
-        self.stats = {"full_hits": 0, "partial_hits": 0, "cold": 0}
+
+    @property
+    def stats(self) -> dict:
+        """Read-only view of admission-tier counts. The PrefixCache's own
+        match counters are the single source of truth for hits; this dict
+        is kept for pool_report()/test compatibility."""
+        return {
+            "full_hits": self.prefix.hits_full if self.prefix else 0,
+            "partial_hits": self.prefix.hits_partial if self.prefix else 0,
+            "cold": self._c_cold.value,
+        }
+
+    def _prefix_hit_ratio(self, key: str) -> float:
+        s = self.stats
+        tot = s["full_hits"] + s["partial_hits"] + s["cold"]
+        return s[key] / tot if tot else 0.0
 
     # -- sizing -------------------------------------------------------------
 
@@ -329,6 +373,8 @@ class PagedScheduler(Scheduler):
             if req.adapter is not None:
                 self.engine.release_adapter(req.adapter)
             raise
+        queue_s = time.perf_counter() - submit_t
+        self._m_queue_s.observe(queue_s)
 
     def _admit_paged(self, slot_idx: int, rid: int, req: Request,
                      submit_t: float, row: int):
@@ -345,13 +391,14 @@ class PagedScheduler(Scheduler):
         akey = ("task", row)
         hashes, h_all = self._hash_chain(prompt) if cacheable else ([], 0)
 
+        tr = self.obs.tracer.get(rid)
         st = _PagedSlot(request_id=rid, req=req,
                         rng=(jax.random.PRNGKey(
                             req.seed if req.seed is not None else rid)
                             if req.top_k else None),
                         pos=S, row=row, submit_t=submit_t, akey=akey,
                         nb_worst=nb_worst, page_hashes=hashes,
-                        full_hash=h_all)
+                        full_hash=h_all, trace=tr)
         tbl = self.tables[slot_idx]
 
         ent = self.prefix.match_full(akey, S, h_all) if cacheable else None
@@ -377,7 +424,7 @@ class PagedScheduler(Scheduler):
             tbl[:nb_cov] = bids
             st.nb_entries = nb_cov
             st.prefill_logits = logits
-            self.stats["full_hits"] += 1
+            hit_kind = "full_hit"  # counted by PrefixCache.match_full
         else:
             m_bids: List[int] = []
             if cacheable and S > page:
@@ -409,7 +456,7 @@ class PagedScheduler(Scheduler):
                     last_pos=S - m * page - 1,
                     task_ids=np.asarray([row]))
                 st.prefill_logits = np.asarray(logits[:, -1:])
-                self.stats["partial_hits"] += 1
+                hit_kind = "partial_hit"  # counted by match_prefix
             else:
                 # ---- cold: prefill the page-aligned prompt, insert ----
                 self._ensure_free(nb_worst)
@@ -428,8 +475,14 @@ class PagedScheduler(Scheduler):
                 self.pool = self.engine.paged_insert(
                     self.pool, fresh, tbl[:nbl])
                 st.prefill_logits = np.asarray(logits[:, -1:])
-                self.stats["cold"] += 1
+                self._c_cold.inc()
+                hit_kind = "cold"
 
+        # marks land only on success: a deferred admission (pool full)
+        # leaves no admit mark, so traces record exactly one admit
+        tr.mark("admit", slot=slot_idx, row=row, adapter=req.adapter,
+                queue_s=time.perf_counter() - submit_t)
+        tr.mark("prefill", kind=hit_kind, blocks=st.nb_entries)
         self._reserved += st.nb_worst - st.nb_entries
         self.slots[slot_idx] = st
         if st.req.top_k and st.rng is not None:
@@ -475,6 +528,7 @@ class PagedScheduler(Scheduler):
     _defer_errors = (BankFullError, BlockPoolFullError)
 
     def step(self) -> int:
+        t0 = time.perf_counter()
         self._do_admissions()
         occupied = [i for i, s in enumerate(self.slots) if s is not None]
         if not occupied:
@@ -516,6 +570,9 @@ class PagedScheduler(Scheduler):
             if not self._emit(i, st, tok):
                 self._tok[i] = tok
                 self._pos[i] = st.pos
+        self._g_free_blocks.set(self.alloc.num_free)
+        self._g_reserved_blocks.set(self._reserved)
+        self._post_tick(t0)
         return produced
 
     # -- accounting ---------------------------------------------------------

@@ -54,6 +54,7 @@ import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.common import tree as tu
+from repro.obs import MetricsRegistry
 from repro.core.hadamard import (SHARED_W_RE, adapter_row, init_bank,
                                  insert_bank_row, validate_adapter_row)
 from repro.dist.api import use_mesh
@@ -200,9 +201,11 @@ class AdapterBank:
         self._pins: Dict[str, int] = {}
         self._masks: Dict[str, np.ndarray] = {}  # name -> (L,) layer mask
         self._free: List[int] = list(range(size))
-        self.loads = 0      # registry loads (misses)
-        self.evictions = 0  # rows displaced to make room
         self._insert_traces = 0
+        # hit/load/evict/pin-stall counters live in a MetricsRegistry; a
+        # scheduler adopting this bank rebinds them onto its shared one
+        self._obs: Optional[MetricsRegistry] = None
+        self.bind_obs(MetricsRegistry())
 
         skip = SHARED_W_RE if shared_w else None
 
@@ -216,6 +219,46 @@ class AdapterBank:
         # base_params' w IS every tenant's w (see shared.shared_w_overlay)
         # and is stored once.
         self.attach(init_bank(base_params, size, shared_w=shared_w), None)
+
+    # -- observability -------------------------------------------------------
+
+    def bind_obs(self, obs: MetricsRegistry) -> None:
+        """Move this bank's counters onto `obs` (values accumulated so far
+        carry over). Scheduler construction calls this so bank pressure
+        lands in the same registry as serving latency."""
+        prev = (self._c_hits, self._c_loads, self._c_evictions,
+                self._c_pin_stalls) if self._obs is not None else None
+        self._obs = obs
+        self._c_hits = obs.counter("bank_hits_total")
+        self._c_loads = obs.counter("bank_loads_total")
+        self._c_evictions = obs.counter("bank_evictions_total")
+        self._c_pin_stalls = obs.counter("bank_pin_stalls_total")
+        cur = (self._c_hits, self._c_loads, self._c_evictions,
+               self._c_pin_stalls)
+        if prev is not None:
+            for old, new in zip(prev, cur):
+                if old is not new:
+                    new.inc(old.value)
+
+    @property
+    def loads(self) -> int:
+        """Registry loads (bank misses)."""
+        return self._c_loads.value
+
+    @property
+    def evictions(self) -> int:
+        """Rows displaced to make room."""
+        return self._c_evictions.value
+
+    @property
+    def hits(self) -> int:
+        """Acquires resolved from a resident row."""
+        return self._c_hits.value
+
+    @property
+    def pin_stalls(self) -> int:
+        """Acquires refused because every row was pinned (BankFullError)."""
+        return self._c_pin_stalls.value
 
     # -- engine plumbing -----------------------------------------------------
 
@@ -258,12 +301,15 @@ class AdapterBank:
         if row is not None:
             self._rows.move_to_end(name)
             self._pins[name] = self._pins.get(name, 0) + 1
+            self._c_hits.inc()
             return row
 
         if not self._free and all(self._pins.get(n, 0) > 0
                                   for n in self._rows):
             # check before the (disk) load: a full-pinned bank is the
             # scheduler's backpressure signal, not an I/O error
+            self._c_pin_stalls.inc()
+            self._obs.event("bank_pin_stall", adapter=name, size=self.size)
             raise BankFullError(
                 f"all {self.size} bank rows are pinned; cannot admit "
                 f"adapter {name!r}")
@@ -289,7 +335,9 @@ class AdapterBank:
             idx = self._rows.pop(victim)
             self._pins.pop(victim, None)
             self._masks.pop(victim, None)
-            self.evictions += 1
+            self._c_evictions.inc()
+            self._obs.event("bank_evict", victim=victim, row=idx,
+                            loading=name)
 
         row_tree = jax.tree.map(
             lambda v: None if v is None else jnp.asarray(v),
@@ -301,7 +349,7 @@ class AdapterBank:
             self._adapters = self._insert(self._adapters, row_tree,
                                           np.int32(idx))
         self._merged = None  # rebuilt lazily on the next tree read
-        self.loads += 1
+        self._c_loads.inc()
         self._rows[name] = idx
         self._pins[name] = 1
         self._masks[name] = mask
@@ -398,6 +446,8 @@ class AdapterBank:
             "resident": len(self._rows),
             "loads": self.loads,
             "evictions": self.evictions,
+            "hits": self.hits,
+            "pin_stalls": self.pin_stalls,
             "insert_traces": self._insert_traces,
             "shared_w": self.shared_w,
             "adapter_bytes": self.adapter_bytes(),

@@ -34,6 +34,7 @@ B=1 prefill nor the fused per-slot tick changes any request's tokens.
 """
 from __future__ import annotations
 
+import sys
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -43,6 +44,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import MetricsRegistry
 from repro.serving.engine import check_temperature, sample_topk
 from repro.serving.registry import BankFullError
 
@@ -88,6 +90,7 @@ class _Slot:
     row: int = 0  # resolved adapter-bank row (pinned while in flight)
     submit_t: float = 0.0
     first_tok_t: float = 0.0
+    trace: object = None  # RequestTrace (set at admission; null when disabled)
 
 
 class Scheduler:
@@ -103,9 +106,16 @@ class Scheduler:
     the check in __init__.
     """
 
+    _sched_kind = "contiguous"  # `sched=` label on every metric series
+    # engine fns that must never recompile once serving started (prefill is
+    # exempt: it legitimately compiles one shape per prompt-length bucket)
+    _RETRACE_KEYS = ("decode", "decode_paged", "verify", "verify_paged",
+                     "draft")
+
     def __init__(self, engine, *, num_slots: int, max_len: int,
                  stream: Optional[Callable[[int, int], None]] = None,
-                 prefill_bucket: Optional[int] = None):
+                 prefill_bucket: Optional[int] = None,
+                 obs: Optional[MetricsRegistry] = None):
         if num_slots < 1:
             raise ValueError("num_slots must be >= 1")
         if prefill_bucket is not None and not self.supports_bucketing(
@@ -136,6 +146,75 @@ class Scheduler:
                     a, b.astype(a.dtype), slot, axis=1),
                 pool, row),
             donate_argnums=(0,))
+        self._init_obs(obs)
+
+    # -- observability ------------------------------------------------------
+
+    def _init_obs(self, obs: Optional[MetricsRegistry]) -> None:
+        """Create this scheduler's instruments on `obs` (or a fresh private
+        registry). Called from __init__ by every scheduler flavour
+        (PagedScheduler re-initializes rather than chaining to super)."""
+        self.obs = obs if obs is not None else MetricsRegistry()
+        kind = self._sched_kind
+        self._m_submitted = self.obs.counter(
+            "serve_requests_submitted_total", sched=kind)
+        self._m_tokens = self.obs.counter("serve_tokens_total", sched=kind)
+        self._m_ticks = self.obs.counter("serve_ticks_total", sched=kind)
+        self._m_tick_s = self.obs.histogram("serve_tick_s", sched=kind)
+        self._m_queue_s = self.obs.histogram("serve_queue_wait_s", sched=kind)
+        self._m_ttft = self.obs.histogram("serve_ttft_s", sched=kind)
+        self._m_tpot = self.obs.histogram("serve_tpot_s", sched=kind)
+        self._m_latency = self.obs.histogram("serve_latency_s", sched=kind)
+        self._m_retrace = self.obs.counter(
+            "serve_retrace_events_total", sched=kind)
+        # retrace watch: baseline each jitted fn's compile count at init
+        # (engines arrive with compile history from warmup / parity runs)
+        self._trace_watch: List[tuple] = []
+        self._trace_allow: Dict[tuple, int] = {}
+        tc = getattr(self.engine, "trace_counts", None)
+        if tc is not None:
+            self._watch_traces("engine", tc)
+        bank = getattr(self.engine, "adapter_bank", None)
+        if bank is not None and hasattr(bank, "bind_obs"):
+            bank.bind_obs(self.obs)
+
+    def _watch_traces(self, src: str, trace_counts: dict) -> None:
+        """Watch a trace-count dict for mid-serve recompiles. The allowance
+        is current-count + 1: the first compile of each fn (possibly during
+        this serve) is legitimate, anything beyond it is a retrace."""
+        self._trace_watch.append((src, trace_counts))
+        for k in self._RETRACE_KEYS:
+            if k in trace_counts:
+                self._trace_allow[(src, k)] = trace_counts.get(k, 0) + 1
+
+    def _check_retraces(self) -> None:
+        for src, tc in self._trace_watch:
+            for k in self._RETRACE_KEYS:
+                allow = self._trace_allow.get((src, k))
+                if allow is None:
+                    continue
+                n = tc.get(k, 0)
+                if n > allow:
+                    extra = n - allow
+                    self._m_retrace.inc(extra)
+                    self.obs.event("retrace", source=src, fn=k, count=extra,
+                                   message="recompiled mid-serve")
+                    print(f"[repro.obs] WARNING: {src}.{k} recompiled "
+                          f"mid-serve (x{extra}) - shapes are leaking into "
+                          "the steady-state serving path", file=sys.stderr)
+                    self._trace_allow[(src, k)] = n
+
+    def _post_tick(self, t0: float) -> None:
+        """Per-tick bookkeeping shared by every scheduler flavour's step():
+        tick latency, tick count, and the zero-retrace invariant check."""
+        self._m_tick_s.observe(time.perf_counter() - t0)
+        self._m_ticks.inc()
+        self._check_retraces()
+
+    @staticmethod
+    def _tenant(st: _Slot) -> str:
+        return st.req.adapter if st.req.adapter is not None else \
+            f"task{st.row}"
 
     @staticmethod
     def supports_bucketing(cfg) -> bool:
@@ -174,6 +253,8 @@ class Scheduler:
                     "published in the registry")
         rid = self._next_id
         self._next_id += 1
+        self._m_submitted.inc()
+        self.obs.tracer.start(rid).mark("submit", prompt_len=S)
         self.queue.append((rid, req, time.perf_counter()))
         return rid
 
@@ -197,6 +278,9 @@ class Scheduler:
         """Record one generated token; returns True if the request is done."""
         if not st.tokens:
             st.first_tok_t = time.perf_counter()
+            st.trace.mark("first_token")
+        st.trace.mark("token")
+        self._m_tokens.inc()
         st.tokens.append(tok)
         if self.stream is not None:
             self.stream(st.request_id, tok)
@@ -210,16 +294,33 @@ class Scheduler:
 
     def _retire(self, slot_idx: int, st: _Slot, reason: str):
         now = time.perf_counter()
+        ttft = st.first_tok_t - st.submit_t
+        latency = now - st.submit_t
+        n_tok = len(st.tokens)
         self.completions[st.request_id] = Completion(
             request_id=st.request_id,
             tokens=np.asarray(st.tokens, np.int32),
             prompt_len=int(np.asarray(st.req.prompt).shape[-1]),
             task_id=st.row,
             finish_reason=reason,
-            ttft_s=st.first_tok_t - st.submit_t,
-            latency_s=now - st.submit_t,
+            ttft_s=ttft,
+            latency_s=latency,
             adapter=st.req.adapter,
         )
+        kind, tenant = self._sched_kind, self._tenant(st)
+        self.obs.counter("serve_requests_completed_total", sched=kind,
+                         reason=reason).inc()
+        self._m_ttft.observe(ttft)
+        self.obs.histogram("serve_ttft_s", sched=kind,
+                           tenant=tenant).observe(ttft)
+        self._m_latency.observe(latency)
+        if n_tok > 1:
+            tpot = (latency - ttft) / (n_tok - 1)
+            self._m_tpot.observe(tpot)
+            self.obs.histogram("serve_tpot_s", sched=kind,
+                               tenant=tenant).observe(tpot)
+        st.trace.mark("retire", reason=reason, tokens=n_tok)
+        self.obs.tracer.finish(st.request_id)
         if st.req.adapter is not None:
             self.engine.release_adapter(st.req.adapter)  # unpin its row
         self.slots[slot_idx] = None  # immediately reusable
@@ -232,6 +333,11 @@ class Scheduler:
         row = req.task_id
         if req.adapter is not None:
             row = self.engine.acquire_adapter(req.adapter)  # pins the row
+        tr = self.obs.tracer.get(rid)
+        queue_s = time.perf_counter() - submit_t
+        self._m_queue_s.observe(queue_s)
+        tr.mark("admit", slot=slot_idx, row=row, adapter=req.adapter,
+                queue_s=queue_s)
         prompt = np.asarray(req.prompt, np.int32).reshape(1, -1)
         S = prompt.shape[1]
         last_pos = None
@@ -244,11 +350,12 @@ class Scheduler:
         logits, fresh = self.engine.prefill(
             prompt, self.max_len, task_ids=np.asarray([row]),
             last_pos=last_pos)
+        tr.mark("prefill", kind="cold", prompt_len=S)
         self.caches = self._admit(self.caches, fresh, jnp.int32(slot_idx))
         rng = (jax.random.PRNGKey(req.seed if req.seed is not None else rid)
                if req.top_k else None)
         st = _Slot(request_id=rid, req=req, rng=rng, pos=S, row=row,
-                   submit_t=submit_t)
+                   submit_t=submit_t, trace=tr)
         self.slots[slot_idx] = st
         st.next_tok = self._sample_one(logits, st)
         self._task[slot_idx] = row
@@ -282,6 +389,11 @@ class Scheduler:
                     prompt_len=int(np.asarray(req.prompt).shape[-1]),
                     task_id=-1, finish_reason="error", ttft_s=0.0,
                     latency_s=now - submit_t, adapter=req.adapter)
+                self.obs.counter("serve_requests_completed_total",
+                                 sched=self._sched_kind, reason="error").inc()
+                tr = self.obs.tracer.get(rid)
+                tr.mark("retire", reason="error", tokens=0)
+                self.obs.tracer.finish(rid)
                 free.append(idx)
             except self._defer_errors:
                 # a shared resource (bank rows / pool blocks) is exhausted
@@ -290,6 +402,7 @@ class Scheduler:
                 # Deliberately not skipping ahead to later queued requests
                 # - reordering would starve the blocked tenant under
                 # sustained traffic.
+                self.obs.tracer.get(rid).mark("defer")
                 self.queue.appendleft((rid, req, submit_t))
                 free.append(idx)
                 break
@@ -300,6 +413,7 @@ class Scheduler:
         """One scheduler tick: admit into free slots, then one fused decode
         step across all occupied slots. Returns the number of tokens
         generated this tick."""
+        t0 = time.perf_counter()
         self._do_admissions()
         occupied = [i for i, s in enumerate(self.slots) if s is not None]
         if not occupied:
@@ -330,6 +444,7 @@ class Scheduler:
             if not self._emit(i, st, tok):
                 self._tok[i] = tok
                 self._pos[i] = st.pos
+        self._post_tick(t0)
         return produced
 
     # -- batch driver -------------------------------------------------------
@@ -347,17 +462,41 @@ class Scheduler:
             self.step()
         elapsed = time.perf_counter() - t0
         done = [self.completions.pop(i) for i in ids]
+        return done, self.report(done, elapsed, ticks=self._ticks - ticks0)
+
+    def report(self, done=(), elapsed_s: float = 0.0,
+               ticks: Optional[int] = None) -> dict:
+        """Throughput/latency report. Counts and means cover `done` (this
+        call's completions); the p50/p95/p99 TTFT and per-token-latency
+        quantiles come from this scheduler's aggregate histograms, so they
+        cover every request retired since construction."""
+        done = list(done)
         n_tok = sum(len(c.tokens) for c in done)
-        report = {
+        return {
             "requests": len(done),
             "tokens": n_tok,
-            "elapsed_s": elapsed,
-            "ticks": self._ticks - ticks0,
-            "requests_per_s": len(done) / elapsed if elapsed else 0.0,
-            "tokens_per_s": n_tok / elapsed if elapsed else 0.0,
+            "elapsed_s": elapsed_s,
+            "ticks": self._ticks if ticks is None else ticks,
+            "requests_per_s": len(done) / elapsed_s if elapsed_s else 0.0,
+            "tokens_per_s": n_tok / elapsed_s if elapsed_s else 0.0,
             "mean_ttft_s": (sum(c.ttft_s for c in done) / len(done)
                             if done else 0.0),
             "mean_latency_s": (sum(c.latency_s for c in done) / len(done)
                                if done else 0.0),
+            "ttft_p50_s": self._m_ttft.percentile(0.50),
+            "ttft_p95_s": self._m_ttft.percentile(0.95),
+            "ttft_p99_s": self._m_ttft.percentile(0.99),
+            "tpot_p50_s": self._m_tpot.percentile(0.50),
+            "tpot_p95_s": self._m_tpot.percentile(0.95),
+            "tpot_p99_s": self._m_tpot.percentile(0.99),
         }
-        return done, report
+
+
+def format_report(report: dict) -> str:
+    """Render a scheduler report dict as aligned human-readable lines
+    (launch/serve prints this instead of recomputing its own report)."""
+    lines = []
+    for k, v in report.items():
+        lines.append(f"  {k:<16} {v:.4f}" if isinstance(v, float)
+                     else f"  {k:<16} {v}")
+    return "\n".join(lines)

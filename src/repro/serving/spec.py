@@ -46,6 +46,7 @@ Restrictions:
 """
 from __future__ import annotations
 
+import time
 from typing import List, Optional, Tuple
 
 import jax
@@ -194,6 +195,31 @@ class DraftLane:
 class _SpecMixin:
     """Shared verify-tick tail: acceptance, emission, accounting."""
 
+    _sched_kind = "spec"
+
+    def _init_spec(self, engine, num_slots: int, max_len: int, spec_k: int,
+                   draft: Optional[Tuple]) -> None:
+        """Shared tail of both spec scheduler constructors: the draft lane
+        plus the speculation counters, registered once on the scheduler's
+        obs registry (the old per-class `spec_stats` dicts were identical
+        copy-pastes; `spec_stats` is now a read-only view of these)."""
+        self.draft_lane = DraftLane(engine, num_slots, max_len, spec_k,
+                                    draft=draft)
+        self._c_drafted = self.obs.counter("serve_spec_drafted_total")
+        self._c_accepted = self.obs.counter("serve_spec_accepted_total")
+        self._c_spec_ticks = self.obs.counter("serve_spec_ticks_total")
+        self.obs.add_derived("spec_acceptance_rate",
+                             lambda: self.acceptance_rate)
+        self._watch_traces("draft_lane", self.draft_lane.trace_counts)
+
+    @property
+    def spec_stats(self) -> dict:
+        """Read-only view of the speculation counters (kept for test/bench
+        compatibility; the registry series are the source of truth)."""
+        return {"drafted": self._c_drafted.value,
+                "accepted": self._c_accepted.value,
+                "spec_ticks": self._c_spec_ticks.value}
+
     def _check_spec_target(self, engine, spec_k: int):
         if spec_k < 1:
             raise ValueError("spec_k must be >= 1")
@@ -236,7 +262,7 @@ class _SpecMixin:
         sampled slots draw ONE token from position 0's distribution."""
         k = self.spec_k
         greedy = np.asarray(jnp.argmax(logits, axis=-1))  # (B, k+1)
-        self.spec_stats["spec_ticks"] += 1
+        self._c_spec_ticks.inc()
         produced = 0
         for i in occupied:
             st = self.slots[i]
@@ -255,8 +281,9 @@ class _SpecMixin:
             a = 0
             while a < k and toks_h[i, a + 1] == greedy[i, a]:
                 a += 1
-            self.spec_stats["drafted"] += k
-            self.spec_stats["accepted"] += a
+            self._c_drafted.inc(k)
+            self._c_accepted.inc(a)
+            st.trace.mark("verify", accepted=a, drafted=k)
             done = False
             tok = 0
             for j in range(a + 1):  # a accepted drafts + the correction
@@ -274,8 +301,8 @@ class _SpecMixin:
 
     @property
     def acceptance_rate(self) -> float:
-        d = self.spec_stats["drafted"]
-        return self.spec_stats["accepted"] / d if d else 0.0
+        d = self._c_drafted.value
+        return self._c_accepted.value / d if d else 0.0
 
 
 class SpecScheduler(_SpecMixin, Scheduler):
@@ -290,14 +317,14 @@ class SpecScheduler(_SpecMixin, Scheduler):
 
     def __init__(self, engine, *, num_slots: int, max_len: int,
                  spec_k: int = 4, draft: Optional[Tuple] = None,
-                 stream=None, prefill_bucket: Optional[int] = None):
+                 stream=None, prefill_bucket: Optional[int] = None,
+                 obs=None):
         self._check_spec_target(engine, spec_k)
         super().__init__(engine, num_slots=num_slots, max_len=max_len,
-                         stream=stream, prefill_bucket=prefill_bucket)
+                         stream=stream, prefill_bucket=prefill_bucket,
+                         obs=obs)
         self.spec_k = spec_k
-        self.draft_lane = DraftLane(engine, num_slots, max_len, spec_k,
-                                    draft=draft)
-        self.spec_stats = {"drafted": 0, "accepted": 0, "spec_ticks": 0}
+        self._init_spec(engine, num_slots, max_len, spec_k, draft)
 
     def _spec_padded_len(self, S: int) -> int:
         if self.prefill_bucket is None:
@@ -314,6 +341,7 @@ class SpecScheduler(_SpecMixin, Scheduler):
         self._admit_draft(slot_idx, req)
 
     def step(self) -> int:
+        t0 = time.perf_counter()
         self._do_admissions()
         occupied = [i for i, s in enumerate(self.slots) if s is not None]
         if not occupied:
@@ -325,7 +353,9 @@ class SpecScheduler(_SpecMixin, Scheduler):
         logits, self.caches = self.engine.verify_step(
             self.caches, toks, pos, task_ids=self._task.copy())
         self._ticks += 1
-        return self._spec_emit(occupied, np.asarray(toks), logits)
+        produced = self._spec_emit(occupied, np.asarray(toks), logits)
+        self._post_tick(t0)
+        return produced
 
 
 class SpecPagedScheduler(_SpecMixin, PagedScheduler):
@@ -340,19 +370,20 @@ class SpecPagedScheduler(_SpecMixin, PagedScheduler):
     rewritten before a reader's mask admits it.
     """
 
+    _sched_kind = "spec_paged"
+
     def __init__(self, engine, *, num_slots: int, num_blocks: int, page: int,
                  max_len: int, spec_k: int = 4, draft: Optional[Tuple] = None,
                  kv_quant: Optional[str] = None, prefix_cache: bool = True,
-                 stream=None, prefill_bucket: Optional[int] = None):
+                 stream=None, prefill_bucket: Optional[int] = None,
+                 obs=None):
         self._check_spec_target(engine, spec_k)
         self.spec_k = spec_k  # _nb_worst needs it during super().__init__
         super().__init__(engine, num_slots=num_slots, num_blocks=num_blocks,
                          page=page, max_len=max_len, kv_quant=kv_quant,
                          prefix_cache=prefix_cache, stream=stream,
-                         prefill_bucket=prefill_bucket)
-        self.draft_lane = DraftLane(engine, num_slots, max_len, spec_k,
-                                    draft=draft)
-        self.spec_stats = {"drafted": 0, "accepted": 0, "spec_ticks": 0}
+                         prefill_bucket=prefill_bucket, obs=obs)
+        self._init_spec(engine, num_slots, max_len, spec_k, draft)
 
     def _spec_padded_len(self, S: int) -> int:
         return self._padded_len(S)
@@ -372,6 +403,7 @@ class SpecPagedScheduler(_SpecMixin, PagedScheduler):
         self._admit_draft(slot_idx, req)
 
     def step(self) -> int:
+        t0 = time.perf_counter()
         self._do_admissions()
         occupied = [i for i, s in enumerate(self.slots) if s is not None]
         if not occupied:
@@ -396,4 +428,8 @@ class SpecPagedScheduler(_SpecMixin, PagedScheduler):
         logits, self.pool = self.engine.paged_verify_step(
             self.pool, toks, pos, self.tables, task_ids=self._task.copy())
         self._ticks += 1
-        return self._spec_emit(occupied, np.asarray(toks), logits)
+        produced = self._spec_emit(occupied, np.asarray(toks), logits)
+        self._g_free_blocks.set(self.alloc.num_free)
+        self._g_reserved_blocks.set(self._reserved)
+        self._post_tick(t0)
+        return produced

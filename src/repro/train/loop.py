@@ -56,7 +56,7 @@ def _host_metrics(m: Dict) -> Dict[str, float]:
 def run_train(state, step_fn, batches: Iterable, *, steps: int,
               log_every: int = 0, manager=None, save_every: int = 0,
               watchdog: Optional[StepWatchdog] = None,
-              log: Callable[[str], None] = print):
+              log: Callable[[str], None] = print, obs=None):
     """Generic jit'd training loop. Returns (state, history).
 
     Metrics stay on device in the hot loop: forcing them to host floats
@@ -67,8 +67,16 @@ def run_train(state, step_fn, batches: Iterable, *, steps: int,
     float dicts either way. With a `watchdog` the loop *does* block every
     step, on purpose: straggler detection needs the step's own wall time,
     not the microseconds of an async dispatch.
+
+    obs: optional `repro.obs.MetricsRegistry`. Step wall time lands in the
+    `train_step_s` histogram only under a watchdog (same reason as above:
+    timing an async dispatch would be meaningless); straggler flags and
+    optimizer-state size are recorded whenever `obs` is given.
     """
     jstep = jax.jit(step_fn, donate_argnums=(0,))
+    h_step = obs.histogram("train_step_s") if obs is not None else None
+    if obs is not None and "opt" in state:
+        obs.gauge("train_opt_state_bytes").set(tu.tree_bytes(state["opt"]))
     history = []
     hosted: Dict[int, Dict[str, float]] = {}  # i -> cadence-materialized
     it = iter(batches)
@@ -81,7 +89,13 @@ def run_train(state, step_fn, batches: Iterable, *, steps: int,
             # a later transfer that drains the previous step's queue)
             jax.block_until_ready(m)
             dt = time.perf_counter() - t0
+            if h_step is not None:
+                h_step.observe(dt)
             if watchdog.observe(i, dt):
+                if obs is not None:
+                    obs.counter("train_straggler_steps_total").inc()
+                    obs.event("straggler", step=i, dt_s=dt,
+                              ewma_s=watchdog.ewma)
                 log(f"[watchdog] straggler step {i}: {dt:.3f}s "
                     f"(ewma {watchdog.ewma:.3f}s)")
         history.append(m)
