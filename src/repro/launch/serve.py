@@ -25,6 +25,13 @@ token-identical, ticks shrink by the acceptance rate:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
       --requests 8 --num-slots 4 --spec-k 4 --tasks 3
 
+SLOs and admission control (`--slo-*`, `--admission`): declare latency /
+queue / KV / acceptance objectives, evaluated as multi-window burn rates
+over the live metrics; with `--admission` the degradation ladder sheds
+and defers admissions (and steps speculation down) to protect in-flight
+requests - activity shows up in the scheduler report's shed/deferred/
+degrade rows and as `shed`/`degrade` events in `--events-file`.
+
 All serving knobs funnel into one validated `ServingConfig`; the
 scheduler (contiguous / paged / speculative) is selected by
 `serving.make_scheduler`. `--static` falls back to the lock-step
@@ -45,10 +52,12 @@ from repro.core.hadamard import extract_delta, perturb_adapters
 from repro.dist.api import use_mesh
 from repro.launch.mesh import parse_mesh
 from repro.models import model as M
-from repro.obs import (JsonlSink, MetricsRegistry, ProfiledTicks,
-                       write_snapshot)
-from repro.serving import (AdapterBank, AdapterRegistry, MultiTaskEngine,
-                           Request, Scheduler, ServeEngine, ServingConfig,
+from repro.obs import (JsonlSink, MetricsRegistry, ProfiledTicks, SLOSpec,
+                       accept_floor, kv_free_floor, queue_depth_max,
+                       tpot_target, ttft_target, write_snapshot)
+from repro.serving import (AdapterBank, AdapterRegistry, AdmissionConfig,
+                           AdmissionShedError, MultiTaskEngine, Request,
+                           Scheduler, ServeEngine, ServingConfig,
                            format_report, make_scheduler)
 
 
@@ -165,6 +174,29 @@ def main():
                         "directory (TensorBoard/Perfetto-loadable)")
     g.add_argument("--profile-ticks", type=int, default=8,
                    help="scheduler ticks the --profile-dir capture spans")
+
+    g = ap.add_argument_group("SLOs / admission control")
+    g.add_argument("--slo-ttft-ms", type=float, default=0,
+                   help=">0: TTFT objective - --slo-target of requests "
+                        "must see first token under this many ms")
+    g.add_argument("--slo-tpot-ms", type=float, default=0,
+                   help=">0: per-output-token latency objective")
+    g.add_argument("--slo-queue-depth", type=int, default=0,
+                   help=">0: queued requests must stay at or under this")
+    g.add_argument("--slo-kv-free", type=int, default=0,
+                   help=">0: paged KV pool must keep this many free blocks")
+    g.add_argument("--slo-accept", type=float, default=0,
+                   help=">0: speculative acceptance-rate floor (0..1)")
+    g.add_argument("--slo-target", type=float, default=0.95,
+                   help="good fraction the latency/gauge objectives must "
+                        "hold (error budget = 1 - target)")
+    g.add_argument("--admission", action="store_true",
+                   help="act on SLO breaches with the degradation ladder: "
+                        "stop prefix fill -> step spec_k down -> defer -> "
+                        "shed (serving/admission.py); without this, "
+                        "breaches only land as registry events")
+    g.add_argument("--admission-check-every", type=int, default=4,
+                   help="evaluate the SLO monitor every N scheduler ticks")
 
     g = ap.add_argument_group("engine / sampling")
     g.add_argument("--top-k", type=int, default=0,
@@ -327,6 +359,34 @@ def main():
     if args.events_file:
         events_sink = JsonlSink(args.events_file)
         obs.add_sink(events_sink)
+    objectives = []
+    if args.slo_ttft_ms > 0:
+        objectives.append(ttft_target(args.slo_ttft_ms,
+                                      target=args.slo_target))
+    if args.slo_tpot_ms > 0:
+        objectives.append(tpot_target(args.slo_tpot_ms,
+                                      target=args.slo_target))
+    if args.slo_queue_depth > 0:
+        objectives.append(queue_depth_max(args.slo_queue_depth,
+                                          target=args.slo_target))
+    if args.slo_kv_free > 0:
+        if not paged:
+            raise SystemExit("--slo-kv-free needs paged KV (--page-size)")
+        objectives.append(kv_free_floor(args.slo_kv_free,
+                                        target=args.slo_target))
+    if args.slo_accept > 0:
+        if not args.spec_k:
+            raise SystemExit("--slo-accept needs speculation (--spec-k)")
+        objectives.append(accept_floor(args.slo_accept))
+    if args.admission and not objectives:
+        raise SystemExit("--admission needs at least one --slo-* objective")
+    slo = SLOSpec(objectives=tuple(objectives)) if objectives else None
+    admission = (AdmissionConfig(check_every=args.admission_check_every)
+                 if args.admission else None)
+    if slo is not None:
+        print("SLOs: " + ", ".join(o.name for o in objectives)
+              + (" (admission ladder armed)" if args.admission
+                 else " (monitor only)"))
     try:
         serve_cfg = ServingConfig(
             num_slots=args.num_slots, max_len=max_len, paged=paged,
@@ -335,7 +395,7 @@ def main():
             prefix_cache=args.prefix_cache, kv_quant=args.kv_quant or None,
             spec_k=args.spec_k, spec_draft=args.spec_draft,
             backbone_quant=quant, prefill_bucket=bucket, top_k=args.top_k,
-            stream=stream)
+            stream=stream, slo=slo, admission=admission)
         sched = make_scheduler(engine, serve_cfg, draft_model=draft_model,
                                obs=obs)
     except ValueError as e:
@@ -382,7 +442,11 @@ def main():
                 registry.publish(hot, task_delta(variants[-1]))
                 print(f"  ++ runtime add: published {hot!r}, submitting "
                       f"{len(late)} request(s) for it mid-stream")
-                ids += [sched.submit(r) for r in late]
+                for r in late:
+                    try:
+                        ids.append(sched.submit(r))
+                    except AdmissionShedError as e:
+                        print(f"  !! shed: {e}")
                 late = []
         elapsed = time.perf_counter() - t0
         done = [sched.completions.pop(i) for i in ids]
@@ -433,6 +497,14 @@ def main():
               f"{pr['full_hits']} full / {pr['partial_hits']} partial "
               f"prefix hits, {pr['cold']} cold prefills")
 
+    if slo is not None:
+        breaches = obs.events_of("slo_breach")
+        print(f"SLO: {len(breaches)} breach event(s)"
+              + (f" ({', '.join(sorted({e['objective'] for e in breaches}))})"
+                 if breaches else "")
+              + (f"; ladder level {report['degrade_level']}, "
+                 f"{report['shed']} shed, {report['deferred_ticks']} "
+                 "deferred tick(s)" if args.admission else ""))
     n_retrace = len(obs.events_of("retrace"))
     if n_retrace:
         print(f"WARNING: {n_retrace} mid-serve retrace event(s) - see "

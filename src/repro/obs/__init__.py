@@ -8,16 +8,24 @@ request lifecycle trace spans, JSONL/Prometheus/JSON exporters, and JAX
 profiler capture helpers. See the README "Observability" section for the
 metric catalog and schemas.
 """
+from repro.obs.aggregate import (merge_snapshots, mergeable_snapshot,
+                                 merged_histogram)
 from repro.obs.export import JsonlSink, render_prometheus, write_snapshot
 from repro.obs.metrics import (DEFAULT_BUCKETS, Counter, Gauge, Histogram,
                                MetricsRegistry, format_key)
 from repro.obs.profile import (ProfiledTicks, annotate, profiler_trace,
                                scope)
+from repro.obs.slo import (Objective, SLOMonitor, SLOSpec, SLOVerdict,
+                           accept_floor, kv_free_floor, queue_depth_max,
+                           tpot_target, ttft_target)
 from repro.obs.trace import NULL_TRACE, RequestTrace, RequestTracer
 
 __all__ = [
     "Counter", "DEFAULT_BUCKETS", "Gauge", "Histogram", "JsonlSink",
-    "MetricsRegistry", "NULL_TRACE", "ProfiledTicks", "RequestTrace",
-    "RequestTracer", "annotate", "format_key", "profiler_trace",
-    "render_prometheus", "scope", "write_snapshot",
+    "MetricsRegistry", "NULL_TRACE", "Objective", "ProfiledTicks",
+    "RequestTrace", "RequestTracer", "SLOMonitor", "SLOSpec", "SLOVerdict",
+    "accept_floor", "annotate", "format_key", "kv_free_floor",
+    "merge_snapshots", "mergeable_snapshot", "merged_histogram",
+    "profiler_trace", "queue_depth_max", "render_prometheus", "scope",
+    "tpot_target", "ttft_target", "write_snapshot",
 ]

@@ -44,10 +44,18 @@ class JsonlSink:
             self._f = None
 
 
+def _prom_escape(v: str) -> str:
+    """Label-value escaping per the text exposition format: backslash
+    first (escaping the escapes the other two introduce), then quote and
+    newline. A tenant name containing `"` must not corrupt the scrape."""
+    return v.replace("\\", "\\\\").replace('"', '\\"').replace("\n", "\\n")
+
+
 def _prom_labels(labels) -> str:
     if not labels:
         return ""
-    return "{" + ",".join(f'{k}="{v}"' for k, v in labels) + "}"
+    return "{" + ",".join(
+        f'{k}="{_prom_escape(str(v))}"' for k, v in labels) + "}"
 
 
 def render_prometheus(registry: MetricsRegistry) -> str:

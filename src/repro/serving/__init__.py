@@ -7,6 +7,8 @@ config instead of four constructors), and `Request`/`Completion` (the
 request surface). Scheduler classes stay importable for typing and
 subclassing; construct them through the factory.
 """
+from repro.serving.admission import (AdmissionConfig, AdmissionController,
+                                     AdmissionShedError)
 from repro.serving.config import ServingConfig, make_scheduler
 from repro.serving.engine import MultiTaskEngine, ServeEngine
 from repro.serving.paged import BlockPoolFullError, PagedScheduler
@@ -16,8 +18,9 @@ from repro.serving.scheduler import (Completion, Request, Scheduler,
 from repro.serving.spec import DraftLane, SpecPagedScheduler, SpecScheduler
 
 __all__ = [
-    "AdapterBank", "AdapterRegistry", "BankFullError", "BlockPoolFullError",
-    "Completion", "DraftLane", "MultiTaskEngine", "PagedScheduler",
-    "Request", "Scheduler", "ServeEngine", "ServingConfig",
+    "AdapterBank", "AdapterRegistry", "AdmissionConfig",
+    "AdmissionController", "AdmissionShedError", "BankFullError",
+    "BlockPoolFullError", "Completion", "DraftLane", "MultiTaskEngine",
+    "PagedScheduler", "Request", "Scheduler", "ServeEngine", "ServingConfig",
     "SpecPagedScheduler", "SpecScheduler", "format_report", "make_scheduler",
 ]

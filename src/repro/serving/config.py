@@ -21,6 +21,9 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Callable, Optional
 
+from repro.obs.slo import SLOSpec
+from repro.serving.admission import AdmissionConfig
+
 _QUANT_MODES = (None, "int8", "fp8")
 
 
@@ -51,6 +54,11 @@ class ServingConfig:
                       Requests from raw prompts (0 = greedy)
       temperature     default sampling temperature for the same
       stream          optional (request_id, token) callback per token
+    SLOs / admission control (obs/slo.py + serving/admission.py):
+      slo             SLOSpec evaluated over the scheduler's metrics
+                      (breaches land as registry events)
+      admission       AdmissionConfig: act on breaches with the
+                      degradation ladder (requires slo)
     """
 
     num_slots: int = 8
@@ -67,8 +75,14 @@ class ServingConfig:
     top_k: int = 0
     temperature: float = 1.0
     stream: Optional[Callable[[int, int], None]] = None
+    slo: Optional[SLOSpec] = None
+    admission: Optional[AdmissionConfig] = None
 
     def __post_init__(self):
+        if self.admission is not None and self.slo is None:
+            raise ValueError(
+                "admission control needs objectives to act on: set slo= "
+                "alongside admission=")
         if self.num_slots < 1:
             raise ValueError("num_slots must be >= 1")
         if self.max_len < 1:
@@ -158,28 +172,34 @@ def make_scheduler(engine, config: ServingConfig, *, draft_model=None,
         num_blocks = (config.num_blocks if config.num_blocks is not None
                       else _auto_blocks(config))
         if config.spec_k:
-            return SpecPagedScheduler(
+            sched = SpecPagedScheduler(
                 engine, num_slots=config.num_slots, num_blocks=num_blocks,
                 page=config.page_size, max_len=config.max_len,
                 spec_k=config.spec_k, draft=draft,
                 kv_quant=config.kv_quant, prefix_cache=config.prefix_cache,
                 stream=config.stream, prefill_bucket=config.prefill_bucket,
                 obs=obs)
-        return PagedScheduler(
-            engine, num_slots=config.num_slots, num_blocks=num_blocks,
-            page=config.page_size, max_len=config.max_len,
-            kv_quant=config.kv_quant, prefix_cache=config.prefix_cache,
-            stream=config.stream, prefill_bucket=config.prefill_bucket,
-            obs=obs)
+        else:
+            sched = PagedScheduler(
+                engine, num_slots=config.num_slots, num_blocks=num_blocks,
+                page=config.page_size, max_len=config.max_len,
+                kv_quant=config.kv_quant, prefix_cache=config.prefix_cache,
+                stream=config.stream, prefill_bucket=config.prefill_bucket,
+                obs=obs)
+    else:
+        from repro.serving.scheduler import Scheduler
+        from repro.serving.spec import SpecScheduler
 
-    from repro.serving.scheduler import Scheduler
-    from repro.serving.spec import SpecScheduler
-
-    if config.spec_k:
-        return SpecScheduler(
-            engine, num_slots=config.num_slots, max_len=config.max_len,
-            spec_k=config.spec_k, draft=draft, stream=config.stream,
-            prefill_bucket=config.prefill_bucket, obs=obs)
-    return Scheduler(
-        engine, num_slots=config.num_slots, max_len=config.max_len,
-        stream=config.stream, prefill_bucket=config.prefill_bucket, obs=obs)
+        if config.spec_k:
+            sched = SpecScheduler(
+                engine, num_slots=config.num_slots, max_len=config.max_len,
+                spec_k=config.spec_k, draft=draft, stream=config.stream,
+                prefill_bucket=config.prefill_bucket, obs=obs)
+        else:
+            sched = Scheduler(
+                engine, num_slots=config.num_slots, max_len=config.max_len,
+                stream=config.stream,
+                prefill_bucket=config.prefill_bucket, obs=obs)
+    if config.slo is not None:
+        sched.attach_slo(config.slo, admission=config.admission)
+    return sched

@@ -267,6 +267,7 @@ class PagedScheduler(Scheduler):
         self.prefix: Optional[PrefixCache] = (
             PrefixCache(obs=self.obs) if prefix_cache and not self._windowed
             else None)
+        self._prefix_fill = True  # publication gate (admission ladder)
         self._c_cold = self.obs.counter("serve_prefix_hits_total",
                                         tier="cold")
         self._g_free_blocks = self.obs.gauge("kv_free_blocks")
@@ -312,6 +313,17 @@ class PagedScheduler(Scheduler):
         s = self.stats
         tot = s["full_hits"] + s["partial_hits"] + s["cold"]
         return s[key] / tot if tot else 0.0
+
+    def set_prefix_fill(self, on: bool) -> None:
+        """Gate prefix-cache PUBLICATION (the admission ladder's first
+        rung). Existing entries keep serving hits and keep their LRU
+        eviction - only the spend side stops: retiring requests no longer
+        pin their prompt blocks, so the pool drains toward in-flight work
+        instead of speculative reuse."""
+        if self.prefix is None or on == self._prefix_fill:
+            return
+        self._prefix_fill = on
+        self.obs.event("prefix_fill", sched=self._sched_kind, enabled=on)
 
     # -- sizing -------------------------------------------------------------
 
@@ -502,7 +514,8 @@ class PagedScheduler(Scheduler):
 
     def _retire(self, slot_idx: int, st: _PagedSlot, reason: str):
         tbl = self.tables[slot_idx]
-        if (self.prefix is not None and st.req.adapter is None
+        if (self.prefix is not None and self._prefix_fill
+                and st.req.adapter is None
                 and reason != "error" and st.prefill_logits is not None):
             # publish the prompt's blocks before dropping our references:
             # full pages into the chain tier, the whole cover (incl. the
@@ -527,7 +540,7 @@ class PagedScheduler(Scheduler):
     # retirement releases capacity (base _do_admissions, FIFO preserved)
     _defer_errors = (BankFullError, BlockPoolFullError)
 
-    def step(self) -> int:
+    def _step_impl(self) -> int:
         t0 = time.perf_counter()
         self._do_admissions()
         occupied = [i for i, s in enumerate(self.slots) if s is not None]

@@ -45,6 +45,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.obs import MetricsRegistry
+from repro.obs.slo import SLOMonitor, SLOSpec
+from repro.serving.admission import (AdmissionConfig, AdmissionController,
+                                     AdmissionShedError)
 from repro.serving.engine import check_temperature, sample_topk
 from repro.serving.registry import BankFullError
 
@@ -167,6 +170,21 @@ class Scheduler:
         self._m_latency = self.obs.histogram("serve_latency_s", sched=kind)
         self._m_retrace = self.obs.counter(
             "serve_retrace_events_total", sched=kind)
+        # admission-control instruments exist (at zero) even without an
+        # attached controller, so report() keys are stable either way
+        self._m_shed = self.obs.counter(
+            "serve_admission_shed_total", sched=kind)
+        self._m_deferred = self.obs.counter(
+            "serve_admission_deferred_ticks_total", sched=kind)
+        self._m_degrade_down = self.obs.counter(
+            "serve_degrade_steps_total", sched=kind, direction="down")
+        self._g_degrade_level = self.obs.gauge(
+            "serve_degrade_level", sched=kind)
+        self._g_queue_depth = self.obs.gauge("serve_queue_depth", sched=kind)
+        self._slo_monitor: Optional[SLOMonitor] = None
+        self._admission: Optional[AdmissionController] = None
+        self._slo_check_every = 4
+        self._pre_ticks = 0
         # retrace watch: baseline each jitted fn's compile count at init
         # (engines arrive with compile history from warmup / parity runs)
         self._trace_watch: List[tuple] = []
@@ -211,6 +229,40 @@ class Scheduler:
         self._m_ticks.inc()
         self._check_retraces()
 
+    def _pre_tick(self) -> None:
+        """Runs exactly once per `step()` call, BEFORE admissions - even on
+        idle ticks, which is what lets an attached admission controller
+        observe recovery and step back up while traffic is paused."""
+        self._g_queue_depth.set(len(self.queue))
+        self._pre_ticks += 1
+        if self._admission is not None:
+            self._admission.on_step(self)
+        elif (self._slo_monitor is not None
+                and self._pre_ticks % self._slo_check_every == 0):
+            self._slo_monitor.evaluate()
+
+    def attach_slo(self, spec: SLOSpec, *,
+                   admission: Optional[AdmissionConfig] = None,
+                   check_every: int = 4,
+                   clock: Optional[Callable[[], float]] = None) -> SLOMonitor:
+        """Attach SLO evaluation (and optionally admission control) to this
+        scheduler's tick. With only a `spec`, objectives are evaluated
+        every `check_every` ticks and breaches land as registry events;
+        with an `AdmissionConfig` the degradation ladder in
+        `repro.serving.admission` acts on them (its own check_every
+        supersedes this one). `clock` injects a time source for
+        deterministic window tests. Normally wired by `make_scheduler`
+        from `ServingConfig(slo=, admission=)`."""
+        kwargs = {"base_labels": {"sched": self._sched_kind}}
+        if clock is not None:
+            kwargs["clock"] = clock
+        self._slo_monitor = SLOMonitor(self.obs, spec, **kwargs)
+        self._slo_check_every = check_every
+        if admission is not None:
+            self._admission = AdmissionController(
+                self, self._slo_monitor, admission)
+        return self._slo_monitor
+
     @staticmethod
     def _tenant(st: _Slot) -> str:
         return st.req.adapter if st.req.adapter is not None else \
@@ -233,7 +285,22 @@ class Scheduler:
         """Queue a request; returns its id. Admission happens on the next
         tick that has a free slot. Named-adapter requests are validated
         here (engine supports names + the name resolves in bank/registry)
-        so the queue never holds a request that can never be admitted."""
+        so the queue never holds a request that can never be admitted.
+
+        Raises `AdmissionShedError` while an attached admission controller
+        is shedding: the front door closes before any validation so the
+        overloaded path stays cheap, and the typed error tells callers
+        this is backpressure (retry later / reroute), not caller error."""
+        if self._admission is not None and self._admission.shedding:
+            objectives = self._admission.breaching_objectives
+            self._m_shed.inc()
+            self.obs.event("shed", sched=self._sched_kind,
+                           level=self._admission.level,
+                           objectives=list(objectives))
+            raise AdmissionShedError(
+                f"admissions shed at degrade level {self._admission.level}"
+                f" (breaching: {', '.join(objectives) or 'recovering'})",
+                level=self._admission.level, objectives=objectives)
         if req.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
         check_temperature(req.temperature)
@@ -373,6 +440,15 @@ class Scheduler:
         """Admit queued requests into free slots. A request finishing at
         its first token frees the slot again, so keep admitting until
         slots or queue run out."""
+        if (self._admission is not None and self._admission.deferring
+                and self.queue and self.active):
+            # degraded: queued requests wait while in-flight work drains.
+            # The `self.active` guard is the liveness escape - with no
+            # requests in flight nothing can retire to trigger recovery,
+            # so an empty engine always admits (run() can never hang on a
+            # deferred queue).
+            self._m_deferred.inc()
+            return
         free = [i for i, s in enumerate(self.slots) if s is None]
         while free and self.queue:
             idx = free.pop()
@@ -410,9 +486,16 @@ class Scheduler:
                 free.append(idx)
 
     def step(self) -> int:
-        """One scheduler tick: admit into free slots, then one fused decode
+        """One scheduler tick: pre-tick hooks (queue gauge, SLO/admission
+        evaluation), admissions into free slots, then one fused decode
         step across all occupied slots. Returns the number of tokens
-        generated this tick."""
+        generated this tick. The body lives in `_step_impl` so flavours
+        (and the spec schedulers' degraded plain-decode fallback) can
+        delegate without re-running the pre-tick hooks."""
+        self._pre_tick()
+        return self._step_impl()
+
+    def _step_impl(self) -> int:
         t0 = time.perf_counter()
         self._do_admissions()
         occupied = [i for i, s in enumerate(self.slots) if s is not None]
@@ -489,6 +572,13 @@ class Scheduler:
             "tpot_p50_s": self._m_tpot.percentile(0.50),
             "tpot_p95_s": self._m_tpot.percentile(0.95),
             "tpot_p99_s": self._m_tpot.percentile(0.99),
+            # admission-control activity since construction (all zero
+            # without an attached controller)
+            "shed": self._m_shed.value,
+            "deferred_ticks": self._m_deferred.value,
+            "degrade_steps": self._m_degrade_down.value,
+            "degrade_level": (self._admission.level
+                              if self._admission is not None else 0),
         }
 
 

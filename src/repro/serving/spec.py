@@ -205,12 +205,37 @@ class _SpecMixin:
         copy-pastes; `spec_stats` is now a read-only view of these)."""
         self.draft_lane = DraftLane(engine, num_slots, max_len, spec_k,
                                     draft=draft)
+        # effective speculation depth (admission ladder steps it down
+        # without retracing: the k+1 draft/verify shapes stay compiled,
+        # only the host-side acceptance cap moves)
+        self.spec_k_eff = spec_k
+        self._g_spec_k = self.obs.gauge("serve_spec_k_effective",
+                                        sched=self._sched_kind)
+        self._g_spec_k.set(spec_k)
         self._c_drafted = self.obs.counter("serve_spec_drafted_total")
         self._c_accepted = self.obs.counter("serve_spec_accepted_total")
         self._c_spec_ticks = self.obs.counter("serve_spec_ticks_total")
         self.obs.add_derived("spec_acceptance_rate",
                              lambda: self.acceptance_rate)
         self._watch_traces("draft_lane", self.draft_lane.trace_counts)
+
+    def set_spec_k(self, k: int) -> None:
+        """Set the effective speculation depth, 0 <= k <= spec_k. Safe at
+        any moment between ticks: reservations and headroom guards keep
+        using the static `spec_k` worst case, the draft/verify jits keep
+        their compiled shapes, and acceptance-by-argmax keeps greedy
+        output token-identical at every depth. k=0 routes whole ticks
+        through the plain decode path; the idle draft lane's cache gap
+        only lowers acceptance after stepping back up, never
+        correctness."""
+        if not 0 <= k <= self.spec_k:
+            raise ValueError(
+                f"effective spec_k must be in [0, {self.spec_k}], got {k}")
+        if k == self.spec_k_eff:
+            return
+        self.spec_k_eff = k
+        self._g_spec_k.set(k)
+        self.obs.event("spec_depth", sched=self._sched_kind, spec_k=k)
 
     @property
     def spec_stats(self) -> dict:
@@ -259,8 +284,11 @@ class _SpecMixin:
                    logits) -> int:
         """Per-slot acceptance against the verify logits (B, k+1, V).
         Greedy slots emit their accepted prefix plus the correction token;
-        sampled slots draw ONE token from position 0's distribution."""
-        k = self.spec_k
+        sampled slots draw ONE token from position 0's distribution.
+        Acceptance is capped at the EFFECTIVE depth (admission ladder);
+        drafted counts the static k - that is the draft work actually
+        spent, which is what the acceptance-rate objective should see."""
+        k = self.spec_k_eff
         greedy = np.asarray(jnp.argmax(logits, axis=-1))  # (B, k+1)
         self._c_spec_ticks.inc()
         produced = 0
@@ -281,7 +309,7 @@ class _SpecMixin:
             a = 0
             while a < k and toks_h[i, a + 1] == greedy[i, a]:
                 a += 1
-            self._c_drafted.inc(k)
+            self._c_drafted.inc(self.spec_k)
             self._c_accepted.inc(a)
             st.trace.mark("verify", accepted=a, drafted=k)
             done = False
@@ -340,7 +368,11 @@ class SpecScheduler(_SpecMixin, Scheduler):
         super()._admit_one(slot_idx, rid, req, submit_t)
         self._admit_draft(slot_idx, req)
 
-    def step(self) -> int:
+    def _step_impl(self) -> int:
+        if self.spec_k_eff == 0:
+            # fully stepped down: plain one-token decode ticks (the first
+            # compile of `decode` here is within the retrace allowance)
+            return Scheduler._step_impl(self)
         t0 = time.perf_counter()
         self._do_admissions()
         occupied = [i for i, s in enumerate(self.slots) if s is not None]
@@ -402,7 +434,10 @@ class SpecPagedScheduler(_SpecMixin, PagedScheduler):
         super()._admit_one(slot_idx, rid, req, submit_t)
         self._admit_draft(slot_idx, req)
 
-    def step(self) -> int:
+    def _step_impl(self) -> int:
+        if self.spec_k_eff == 0:
+            # fully stepped down: plain paged decode ticks
+            return PagedScheduler._step_impl(self)
         t0 = time.perf_counter()
         self._do_admissions()
         occupied = [i for i, s in enumerate(self.slots) if s is not None]

@@ -25,7 +25,8 @@ from conftest import tiny_cfg
 from repro.common.types import AdapterCfg
 from repro.models import model as M
 from repro.obs import (DEFAULT_BUCKETS, Histogram, JsonlSink, MetricsRegistry,
-                       NULL_TRACE, render_prometheus, write_snapshot)
+                       NULL_TRACE, format_key, render_prometheus,
+                       write_snapshot)
 from repro.serving import (MultiTaskEngine, Request, ServeEngine,
                            ServingConfig, make_scheduler)
 
@@ -170,6 +171,81 @@ def test_write_snapshot_json_and_prom(tmp_path):
         {"a_total": 2}
     write_snapshot(reg, str(tmp_path / "m.prom"))
     assert "a_total 2" in (tmp_path / "m.prom").read_text()
+
+
+def _parse_prom_labels(s):
+    """Strict label-body parser: quoted values with the three escapes the
+    text exposition format defines (backslash, quote, newline)."""
+    out = {}
+    i = 0
+    while i < len(s):
+        eq = s.index("=", i)
+        key = s[i:eq]
+        assert s[eq + 1] == '"', s
+        i = eq + 2
+        buf = []
+        while s[i] != '"':
+            if s[i] == "\\":
+                buf.append({"\\": "\\", '"': '"', "n": "\n"}[s[i + 1]])
+                i += 2
+            else:
+                buf.append(s[i])
+                i += 1
+        out[key] = "".join(buf)
+        i += 1
+        if i < len(s):
+            assert s[i] == ","
+            i += 1
+    return out
+
+
+def _parse_prom(text):
+    """Parse a v0.0.4 exposition into ({name: kind}, [(name, labels,
+    value)]), asserting structure: exactly one TYPE line per metric name,
+    every sample line well-formed."""
+    import re
+
+    name_re = re.compile(r"[a-zA-Z_:][a-zA-Z0-9_:]*$")
+    typed, samples = {}, []
+    assert text.endswith("\n")
+    for line in text[:-1].split("\n"):
+        assert line
+        if line.startswith("# TYPE "):
+            _, _, name, kind = line.split(" ")
+            assert name_re.match(name)
+            assert kind in ("counter", "gauge", "histogram")
+            assert name not in typed, f"duplicate TYPE for {name}"
+            typed[name] = kind
+            continue
+        assert not line.startswith("#")
+        if "{" in line:
+            name, rest = line.split("{", 1)
+            body, val = rest.rsplit("} ", 1)
+            labels = _parse_prom_labels(body)
+        else:
+            name, val = line.rsplit(" ", 1)
+            labels = {}
+        assert name_re.match(name)
+        samples.append((name, labels, float(val)))
+    return typed, samples
+
+
+def test_prometheus_label_escaping_round_trip():
+    """A label value carrying a backslash, quotes and a newline must not
+    corrupt the scrape: one physical line, escaped per the format, and a
+    strict parser recovers the original value exactly."""
+    reg = MetricsRegistry()
+    nasty = 'ten\\ant "a"\nsecond line'
+    reg.counter("bank_hits_total", tenant=nasty).inc(3)
+    text = render_prometheus(reg)
+    (line,) = [l for l in text.splitlines()
+               if l.startswith("bank_hits_total{")]
+    assert "\\\\" in line and '\\"' in line and "\\n" in line
+    _typed, samples = _parse_prom(text)
+    ((_name, labels, value),) = [s for s in samples
+                                 if s[0] == "bank_hits_total"]
+    assert labels == {"tenant": nasty}
+    assert value == 3
 
 
 # ---------------------------------------------------------------------------
@@ -362,6 +438,68 @@ def test_mixed_serve_snapshot_has_every_series(tmp_path):
     assert sched.stats["full_hits"] == c["serve_prefix_hits_total{tier=full}"]
     assert sched.spec_stats["drafted"] == c["serve_spec_drafted_total"]
     assert bank.evictions == c["bank_evictions_total"]
+
+
+def test_prometheus_round_trip_under_real_serve():
+    """Render a registry fed by a real spec+paged serve and re-parse the
+    exposition strictly: every sample maps to a TYPE line, histogram
+    buckets are cumulative with a +Inf bucket equal to _count, and
+    counter values match the machine snapshot exactly."""
+    cfg, eng = _world()
+    obs = MetricsRegistry()
+    sched = make_scheduler(eng, ServingConfig(
+        num_slots=2, max_len=32, paged=True, page_size=8, spec_k=2),
+        obs=obs)
+    rs = np.random.RandomState(5)
+    done, _ = sched.run([
+        Request(prompt=rs.randint(0, 97, size=(8,)), max_new_tokens=4,
+                task_id=i % 2) for i in range(5)])
+    assert len(done) == 5
+
+    typed, samples = _parse_prom(render_prometheus(obs))
+
+    def base_of(name):
+        if name in typed:
+            return name, None
+        for suf in ("_bucket", "_sum", "_count"):
+            if name.endswith(suf) and name[: -len(suf)] in typed:
+                return name[: -len(suf)], suf
+        raise AssertionError(f"sample {name!r} has no TYPE line")
+
+    hist_groups = {}
+    for name, labels, value in samples:
+        base, suf = base_of(name)
+        if suf is None:
+            assert typed[base] in ("counter", "gauge")
+            continue
+        assert typed[base] == "histogram"
+        key = (base, tuple(sorted(
+            (k, v) for k, v in labels.items() if k != "le")))
+        g = hist_groups.setdefault(key, {"buckets": []})
+        if suf == "_bucket":
+            g["buckets"].append((float(labels["le"]), value))
+        else:
+            g[suf[1:]] = value
+
+    assert any(b == "serve_ttft_s" for b, _ in hist_groups)
+    for (base, labkey), g in hist_groups.items():
+        assert "count" in g and "sum" in g, (base, labkey)
+        les = [le for le, _ in g["buckets"]]
+        assert les == sorted(les) and les[-1] == math.inf, (base, labkey)
+        cums = [c for _, c in g["buckets"]]
+        assert all(a <= b for a, b in zip(cums, cums[1:]))
+        assert cums[-1] == g["count"]
+        if g["count"]:
+            assert g["sum"] > 0.0
+
+    # every counter series round-trips to its snapshot value
+    snap = obs.snapshot()
+    rendered = {format_key(name, tuple(sorted(labels.items()))): value
+                for name, labels, value in samples
+                if typed.get(name) == "counter"}
+    assert snap["counters"]
+    for k, v in snap["counters"].items():
+        assert rendered[k] == v, k
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,617 @@
+"""SLO engine, admission ladder, cross-replica aggregation, regression gate.
+
+Covers, in order: multi-window burn-rate semantics on an injectable
+clock (no data is healthy, the long window vetoes short spikes, breach/
+recover transitions emit events exactly once), gauge and ratio objective
+kinds, objective/spec validation, mergeable snapshots (bucket-wise adds
+are exactly equivalent to one registry observing both streams, plus the
+loud-failure validation paths), a fleet merge over two real scheduler
+runs, the ISSUE's acceptance overload test (a spec+paged scheduler
+driven past its SLO walks the full degradation ladder - prefix fill
+stop, spec_k halving, defer, typed shed - then recovers by hysteresis,
+with every completion token-identical to an unloaded run), monitor-only
+attachment, the ServingConfig wiring, and the perf-regression trajectory
+gate (median baseline, direction/tolerance, CLI + benchmarks.run exit
+codes)."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import tiny_cfg
+from repro.common.types import AdapterCfg
+from repro.models import model as M
+from repro.obs import (MetricsRegistry, SLOMonitor, SLOSpec, accept_floor,
+                       kv_free_floor, merge_snapshots, mergeable_snapshot,
+                       merged_histogram, queue_depth_max, ttft_target)
+from repro.obs.regress import (check_regression, history_entry, load_history)
+from repro.obs.slo import Objective
+from repro.serving import (AdmissionConfig, AdmissionShedError,
+                           MultiTaskEngine, Request, ServingConfig,
+                           make_scheduler)
+
+KEY = jax.random.PRNGKey(0)
+
+
+class _Clock:
+    """Injectable monotonic clock so window tests are deterministic."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def _tasks_world():
+    cfg = tiny_cfg(adapter=AdapterCfg(kind="hadamard"))
+    base = M.init_params(KEY, cfg)
+    from repro.core.hadamard import perturb_adapters
+
+    tasks = [perturb_adapters(base, jax.random.fold_in(KEY, 80 + t),
+                              scale=0.01) for t in range(2)]
+    return cfg, MultiTaskEngine(cfg, tasks)
+
+
+_WORLD = {}
+
+
+def _world():
+    if not _WORLD:
+        _WORLD["cfg"], _WORLD["eng"] = _tasks_world()
+    return _WORLD["cfg"], _WORLD["eng"]
+
+
+# ---------------------------------------------------------------------------
+# burn-rate semantics
+# ---------------------------------------------------------------------------
+
+
+def test_latency_burn_rate_multi_window():
+    """The long window vetoes a short spike; sustained badness breaches;
+    traffic stopping (windows draining) recovers. Transitions emit
+    exactly one breach event + counter and one recovery event."""
+    reg = MetricsRegistry()
+    h = reg.histogram("serve_ttft_s", sched="contiguous")
+    clk = _Clock()
+    spec = SLOSpec(objectives=(ttft_target(100.0, target=0.5),),
+                   windows=((2.0, 1.0), (10.0, 1.0)))
+    mon = SLOMonitor(reg, spec, base_labels={"sched": "contiguous"},
+                     clock=clk)
+    obj = spec.objectives[0].name
+
+    # no data at all: an idle scheduler is healthy, not breaching
+    v = mon.evaluate()[0]
+    assert not v.breaching and v.fraction_bad == 0.0
+
+    # 10s of good traffic (10ms << 100ms threshold)
+    for _ in range(10):
+        clk.advance(1.0)
+        for _ in range(10):
+            h.observe(0.010)
+        assert not mon.evaluate()[0].breaching
+
+    # one bad second: the 2s window burns (100% bad, burn 2.0) but the
+    # 10s window is diluted to 10% bad (burn 0.2) - no breach
+    clk.advance(1.0)
+    for _ in range(10):
+        h.observe(0.500)
+    v = mon.evaluate()[0]
+    assert not v.breaching
+    assert v.burn_rates[0] >= 1.0 > v.burn_rates[1]
+    assert not reg.events_of("slo_breach")
+
+    # sustained badness: the long window crosses its threshold too
+    breached_at = None
+    for i in range(10):
+        clk.advance(1.0)
+        for _ in range(10):
+            h.observe(0.500)
+        if mon.evaluate()[0].breaching:
+            breached_at = i
+            break
+    assert breached_at is not None
+    assert mon.breaching
+    assert len(reg.events_of("slo_breach")) == 1
+    assert reg.snapshot()["counters"][
+        f"slo_breaches_total{{objective={obj}}}"] == 1
+
+    # breaching state holds (no duplicate events) while badness continues
+    clk.advance(1.0)
+    for _ in range(10):
+        h.observe(0.500)
+    assert mon.evaluate()[0].breaching
+    assert len(reg.events_of("slo_breach")) == 1
+
+    # traffic stops; once the windows age out there is no new evidence of
+    # burn - healthy again, one recovery event
+    clk.advance(11.0)
+    v = mon.evaluate()[0]
+    assert not v.breaching and not mon.breaching
+    assert len(reg.events_of("slo_recovered")) == 1
+
+
+def test_gauge_and_ratio_objectives():
+    reg = MetricsRegistry()
+    clk = _Clock()
+    q = reg.gauge("serve_queue_depth", sched="paged")
+    free = reg.gauge("kv_free_blocks")
+    drafted = reg.counter("serve_spec_drafted_total")
+    accepted = reg.counter("serve_spec_accepted_total")
+    spec = SLOSpec(objectives=(queue_depth_max(4, target=0.5),
+                               kv_free_floor(8, target=0.5),
+                               accept_floor(0.5)),
+                   windows=((2.0, 1.0), (10.0, 1.0)))
+    mon = SLOMonitor(reg, spec, base_labels={"sched": "paged"}, clock=clk)
+
+    # healthy steady state: queue under cap, free blocks above floor,
+    # 80% acceptance against a 50% floor
+    q.set(2)
+    free.set(32)
+    drafted.inc(100)
+    accepted.inc(80)
+    for _ in range(5):
+        clk.advance(1.0)
+        vs = {v.objective: v for v in mon.evaluate()}
+        assert not any(v.breaching for v in vs.values())
+    assert vs["queue_le_4"].value == 2.0
+    assert vs["kv_free_ge_8"].value == 32.0
+
+    # flip all three bad: gauges violate on every sample, and drafts
+    # keep landing with nothing accepted, so both windows agree within a
+    # few evaluations
+    q.set(10)
+    free.set(2)
+    for _ in range(12):
+        clk.advance(1.0)
+        drafted.inc(50)
+        vs = {v.objective: v for v in mon.evaluate()}
+    assert all(v.breaching for v in vs.values())
+
+    # recover: clear the gauges, acceptance back to 100% in-window, age
+    # the bad samples out of the long window
+    q.set(1)
+    free.set(32)
+    clk.advance(11.0)
+    for _ in range(3):
+        clk.advance(1.0)
+        drafted.inc(50)
+        accepted.inc(50)
+        vs = {v.objective: v for v in mon.evaluate()}
+    assert not any(v.breaching for v in vs.values())
+    assert len(reg.events_of("slo_recovered")) == 3
+
+
+def test_objective_and_spec_validation():
+    with pytest.raises(ValueError, match="target must be in"):
+        ttft_target(250.0, target=1.0)
+    with pytest.raises(ValueError, match="unknown objective kind"):
+        Objective(name="x", kind="latency_p99", metric="m", threshold=1.0)
+    with pytest.raises(ValueError, match="accept_floor rate"):
+        accept_floor(1.5)
+    with pytest.raises(ValueError, match="at least one objective"):
+        SLOSpec(objectives=())
+    with pytest.raises(ValueError, match="positive and ascending"):
+        SLOSpec(objectives=(queue_depth_max(4),),
+                windows=((10.0, 1.0), (2.0, 1.0)))
+    with pytest.raises(ValueError, match="duplicate objective"):
+        SLOSpec(objectives=(queue_depth_max(4), queue_depth_max(4)))
+
+
+def test_tenant_scoped_latency_objective():
+    """A tenant-qualified objective only reads that tenant's series."""
+    reg = MetricsRegistry()
+    clk = _Clock()
+    good = reg.histogram("serve_ttft_s", sched="paged", tenant="good")
+    bad = reg.histogram("serve_ttft_s", sched="paged", tenant="bad")
+    spec = SLOSpec(objectives=(ttft_target(100.0, target=0.5, tenant="good"),),
+                   windows=((2.0, 1.0),))
+    mon = SLOMonitor(reg, spec, base_labels={"sched": "paged"}, clock=clk)
+    mon.evaluate()
+    for _ in range(20):
+        good.observe(0.010)
+        bad.observe(9.000)  # the other tenant burning must not matter
+    clk.advance(1.0)
+    assert not mon.evaluate()[0].breaching
+    for _ in range(20):
+        good.observe(9.000)
+    clk.advance(1.0)
+    assert mon.evaluate()[0].breaching
+
+
+# ---------------------------------------------------------------------------
+# cross-replica aggregation
+# ---------------------------------------------------------------------------
+
+
+def _feed(reg, ttfts, tokens, free_blocks):
+    reg.counter("serve_tokens_total", sched="paged").inc(tokens)
+    h = reg.histogram("serve_ttft_s", sched="paged")
+    for v in ttfts:
+        h.observe(v)
+    reg.gauge("kv_free_blocks").set(free_blocks)
+    reg.event("shed", sched="paged")
+
+
+def test_merge_is_exactly_a_combined_run():
+    """merge(snapshot(A), snapshot(B)) == snapshot(registry that observed
+    A's stream and B's stream): counters sum and histograms add
+    bucket-wise to the exact same counts/sum/min/max."""
+    ra, rb, rc = MetricsRegistry(), MetricsRegistry(), MetricsRegistry()
+    stream_a = ([0.004, 0.120, 3.500], 37, 5.0)
+    stream_b = ([0.0009, 0.050, 0.050, 7.000], 13, 11.0)
+    _feed(ra, *stream_a)
+    _feed(rb, *stream_b)
+    _feed(rc, stream_a[0] + stream_b[0], stream_a[1] + stream_b[1], 0.0)
+
+    fleet = merge_snapshots([mergeable_snapshot(ra, "r0"),
+                             mergeable_snapshot(rb, "r1")])
+    combined = mergeable_snapshot(rc, "all")
+
+    assert fleet["replicas"] == ["r0", "r1"]
+    assert fleet["counters"] == combined["counters"]
+    hk = "serve_ttft_s{sched=paged}"
+    fm, fc = fleet["histograms"][hk], combined["histograms"][hk]
+    for field in ("buckets", "counts", "count", "sum", "min", "max"):
+        assert fm[field] == fc[field], field
+    # quantiles re-derived from the merged counts match the combined run
+    ch = merged_histogram(fc)
+    assert fm["p95"] == ch.percentile(0.95)
+    assert fm["p50"] == ch.percentile(0.50)
+    # gauges stay per-replica - a fleet "last write" would be meaningless
+    g = fleet["gauges"]["kv_free_blocks"]
+    assert g["replicas"] == {"r0": 5.0, "r1": 11.0}
+    assert (g["min"], g["max"], g["sum"], g["mean"]) == (5.0, 11.0, 16.0, 8.0)
+    # event counts sum; merged snapshots survive a JSON round trip
+    assert fleet["events_by_kind"]["shed"] == 2
+    assert json.loads(json.dumps(fleet))["counters"] == fleet["counters"]
+
+
+def test_merge_validation_is_loud():
+    ra, rb = MetricsRegistry(), MetricsRegistry()
+    _feed(ra, [0.1], 1, 1.0)
+    _feed(rb, [0.2], 2, 2.0)
+    sa, sb = mergeable_snapshot(ra, "r0"), mergeable_snapshot(rb, "r1")
+
+    with pytest.raises(ValueError, match="at least one snapshot"):
+        merge_snapshots([])
+    with pytest.raises(ValueError, match="duplicate replica ids"):
+        merge_snapshots([sa, mergeable_snapshot(rb, "r0")])
+    with pytest.raises(ValueError, match="schema"):
+        merge_snapshots([sa, dict(sb, schema="repro-obs-agg-v999")])
+    # merged views are terminal: gauges already lost per-replica shape
+    fleet = merge_snapshots([sa, sb])
+    with pytest.raises(ValueError, match="already a merged fleet view"):
+        merge_snapshots([fleet, sa])
+    # differing bucket layouts must never silently add
+    rc = MetricsRegistry()
+    rc.histogram("serve_ttft_s", buckets=(1.0, 2.0), sched="paged") \
+        .observe(0.5)
+    with pytest.raises(ValueError, match="bucket layout differs"):
+        merge_snapshots([sa, mergeable_snapshot(rc, "r2")])
+
+
+def test_merge_over_independent_scheduler_runs():
+    """Two schedulers run independently into private registries; the
+    fleet view reproduces the deterministic totals of both runs."""
+    cfg, eng = _world()
+    regs, dones = [], []
+    for seed in (0, 1):
+        reg = MetricsRegistry()
+        sched = make_scheduler(eng, ServingConfig(num_slots=2, max_len=32),
+                               obs=reg)
+        rs = np.random.RandomState(seed)
+        reqs = [Request(prompt=rs.randint(0, cfg.vocab_size, size=(5,)),
+                        max_new_tokens=4, task_id=i % 2) for i in range(3)]
+        done, _ = sched.run(reqs)
+        regs.append(reg)
+        dones.append(done)
+
+    fleet = merge_snapshots([mergeable_snapshot(r, f"replica{i}")
+                             for i, r in enumerate(regs)])
+    total_tokens = sum(len(c.tokens) for d in dones for c in d)
+    assert fleet["counters"][
+        "serve_tokens_total{sched=contiguous}"] == total_tokens
+    assert fleet["counters"][
+        "serve_requests_submitted_total{sched=contiguous}"] == 6
+    th = fleet["histograms"]["serve_ttft_s{sched=contiguous}"]
+    assert th["count"] == 6
+    assert sum(th["counts"]) == 6
+    assert merged_histogram(th).percentile(0.5) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# the overload ladder (ISSUE acceptance test)
+# ---------------------------------------------------------------------------
+
+
+def _burst(cfg, n, max_new):
+    rs = np.random.RandomState(7)
+    return [Request(prompt=rs.randint(0, cfg.vocab_size, size=(6,)),
+                    max_new_tokens=max_new, task_id=i % 2) for i in range(n)]
+
+
+def test_overload_walks_full_ladder_and_recovers_token_identical():
+    """Drive a spec+paged scheduler past a queue-depth SLO: the burn-rate
+    verdict fires, the ladder steps through prefix_fill_stop -> spec_k=1
+    -> spec_k=0 -> defer -> shed in order, submit() raises the typed
+    shed error, and after the burst drains hysteresis walks all the way
+    back up - while every in-flight/deferred request completes with
+    tokens identical to an unloaded run of the same stream."""
+    cfg, eng = _world()
+    obs = MetricsRegistry()
+    sched = make_scheduler(
+        eng, ServingConfig(num_slots=2, max_len=32, paged=True, page_size=8,
+                           spec_k=2), obs=obs)
+    clk = _Clock()
+    mon = sched.attach_slo(
+        SLOSpec(objectives=(queue_depth_max(2, target=0.5),),
+                windows=((2.0, 1.0), (10.0, 1.0))),
+        admission=AdmissionConfig(check_every=1, degrade_after=1,
+                                  recover_after=2),
+        clock=clk)
+    ctrl = sched._admission
+    assert ctrl.rung_names() == ["prefix_fill_stop", "spec_k=1", "spec_k=0",
+                                 "defer", "shed"]
+
+    reqs = _burst(cfg, 12, 6)
+    ids = [sched.submit(r) for r in reqs]
+
+    shed_probed = False
+    ticks = 0
+    while sched.pending or sched.active:
+        clk.advance(1.0)
+        sched.step()
+        ticks += 1
+        assert ticks < 400, "overloaded drain did not converge"
+        if ctrl.shedding and not shed_probed:
+            # the shed rung closes the front door with a typed error -
+            # backpressure, not caller error - while nothing in flight
+            # or queued is dropped
+            probe = Request(prompt=np.arange(4, dtype=np.int32),
+                            max_new_tokens=2)
+            with pytest.raises(AdmissionShedError) as ei:
+                sched.submit(probe)
+            assert ei.value.level == 5
+            assert "queue_le_2" in ei.value.objectives
+            shed_probed = True
+    assert shed_probed, "ladder never reached the shed rung"
+
+    # the full ladder fired, in order, one rung per breaching evaluation
+    down = [e["rung"] for e in obs.events_of("degrade")
+            if e["direction"] == "down"]
+    assert down[:5] == ctrl.rung_names()
+    assert obs.events_of("slo_breach")
+    assert obs.events_of("shed")
+    rep = sched.report(elapsed_s=1.0)
+    assert rep["shed"] == 1
+    assert rep["deferred_ticks"] >= 1
+    assert rep["degrade_steps"] >= 5
+
+    # hysteresis: queue is empty now, so every evaluation is healthy;
+    # idle ticks step the ladder back up one rung per recover_after
+    clk.advance(11.0)
+    for _ in range(20):
+        clk.advance(1.0)
+        sched.step()
+    assert ctrl.level == 0
+    assert not ctrl.shedding and not ctrl.deferring
+    assert sched.spec_k_eff == sched.spec_k == 2
+    assert sched._prefix_fill is True
+    assert not mon.breaching
+    assert [e["rung"] for e in obs.events_of("degrade")
+            if e["direction"] == "up"].count("prefix_fill_stop") >= 1
+    assert sched.report(elapsed_s=1.0)["degrade_level"] == 0
+
+    # token identity: degradation never touched in-flight work. An
+    # unloaded scheduler over the same stream produces the same tokens.
+    done = [sched.completions.pop(i) for i in ids]
+    sched2 = make_scheduler(
+        eng, ServingConfig(num_slots=2, max_len=32, paged=True, page_size=8,
+                           spec_k=2), obs=MetricsRegistry())
+    done2, _ = sched2.run(_burst(cfg, 12, 6))
+    assert len(done) == len(done2) == 12
+    for c, c2 in zip(done, done2):
+        assert c.finish_reason == c2.finish_reason
+        np.testing.assert_array_equal(c.tokens, c2.tokens)
+    # and the no-retrace invariant held through every rung flip
+    assert obs.events_of("retrace") == []
+
+
+def test_monitor_only_attach_observes_without_acting():
+    """attach_slo without an AdmissionConfig: breaches land as events
+    and verdict state, but nothing degrades and submit never sheds."""
+    cfg, eng = _world()
+    obs = MetricsRegistry()
+    sched = make_scheduler(eng, ServingConfig(num_slots=1, max_len=32),
+                           obs=obs)
+    clk = _Clock()
+    sched.attach_slo(
+        SLOSpec(objectives=(queue_depth_max(0, target=0.5),),
+                windows=((1.0, 1.0), (2.0, 1.0))),
+        check_every=1, clock=clk)
+    assert sched._admission is None
+
+    reqs = _burst(cfg, 4, 3)
+    ids = [sched.submit(r) for r in reqs]
+    ticks = 0
+    while sched.pending or sched.active:
+        clk.advance(1.0)
+        sched.step()
+        ticks += 1
+        assert ticks < 200
+    assert obs.events_of("slo_breach")
+    assert not obs.events_of("degrade") and not obs.events_of("shed")
+    rep = sched.report(elapsed_s=1.0)
+    assert rep["shed"] == 0 and rep["degrade_level"] == 0
+    assert len([sched.completions.pop(i) for i in ids]) == 4
+
+
+def test_serving_config_wires_slo_and_admission():
+    cfg, eng = _world()
+    sc = ServingConfig(num_slots=2, max_len=32,
+                       slo=SLOSpec(objectives=(queue_depth_max(64),)),
+                       admission=AdmissionConfig())
+    sched = make_scheduler(eng, sc, obs=MetricsRegistry())
+    assert sched._slo_monitor is not None
+    assert sched._admission is not None
+    # a contiguous non-speculative scheduler gets only the terminal rungs
+    assert sched._admission.rung_names() == ["defer", "shed"]
+    with pytest.raises(ValueError, match="needs objectives"):
+        ServingConfig(num_slots=2, max_len=32, admission=AdmissionConfig())
+    with pytest.raises(ValueError, match="check_every"):
+        AdmissionConfig(check_every=0)
+
+
+# ---------------------------------------------------------------------------
+# perf-regression trajectory gate
+# ---------------------------------------------------------------------------
+
+
+def _payload(metrics, backend="cpu", fast=True, sha="cafe"):
+    return {
+        "schema": "repro-bench-v2",
+        "git_sha": sha,
+        "created_unix": 1.7e9,
+        "created_utc": "2026-08-08T00:00:00+00:00",
+        "backend": backend,
+        "fast": fast,
+        "failures": [],
+        "suites": {"kernels": [
+            {"name": n, "us_per_call": us, "derived": ""}
+            for n, us in metrics.items()]},
+    }
+
+
+def test_regression_gate_median_baseline_and_directions():
+    history = [history_entry(_payload({"decode": us, "prefill": 50.0}))
+               for us in (90.0, 100.0, 400.0)]  # median absorbs the outlier
+
+    ok = check_regression(history, _payload({"decode": 120.0,
+                                             "prefill": 50.0}))
+    assert ok.ok and not ok.regressions
+    assert ok.comparable_runs == 3
+
+    bad = check_regression(history, _payload({"decode": 300.0,
+                                              "prefill": 50.0}))
+    assert not bad.ok
+    (reg,) = bad.regressions
+    assert reg.metric == "kernels:decode"
+    assert reg.baseline == 100.0 and reg.current == 300.0
+    assert any("REGRESSION kernels:decode" in l for l in bad.summary_lines())
+
+    # tolerance is a knob; per-metric overrides win
+    assert check_regression(history, _payload({"decode": 300.0,
+                                               "prefill": 50.0}),
+                            tolerances={"kernels:decode": 3.0}).ok
+    # higher_is_better inverts the bad direction
+    hib = check_regression(history, _payload({"decode": 40.0,
+                                              "prefill": 50.0}),
+                           higher_is_better=("kernels:decode",))
+    assert [v.metric for v in hib.regressions] == ["kernels:decode"]
+
+    # new metrics and metrics missing from the current run never fail
+    drift = check_regression(history, _payload({"decode": 100.0,
+                                                "attn": 5.0}))
+    assert drift.ok
+    statuses = {v.metric: v.status for v in drift.verdicts}
+    assert statuses["kernels:attn"] == "new"
+    assert statuses["kernels:prefill"] == "missing"
+
+    # a different backend/budget is never a comparable baseline
+    gpu = check_regression(history, _payload({"decode": 900.0},
+                                             backend="gpu"))
+    assert gpu.ok and gpu.comparable_runs == 0
+
+    # rows with us <= 0 (pass/fail gate rows) never enter the trajectory
+    assert "kernels:gate" not in history_entry(
+        _payload({"gate": 0.0, "decode": 1.0}))["metrics"]
+
+
+def test_regression_history_roundtrip_and_schema(tmp_path):
+    from repro.obs import regress
+
+    path = str(tmp_path / "hist.jsonl")
+    assert load_history(path) == []  # missing file = empty trajectory
+    e = history_entry(_payload({"decode": 100.0}, sha="abc123"))
+    assert e["schema"] == regress.HISTORY_SCHEMA
+    assert e["git_sha"] == "abc123" and e["backend"] == "cpu"
+    regress.append_history(path, e)
+    regress.append_history(path, history_entry(_payload({"decode": 110.0})))
+    assert [h["metrics"]["kernels:decode"] for h in load_history(path)] \
+        == [100.0, 110.0]
+    with pytest.raises(ValueError, match="unknown bench payload schema"):
+        history_entry({"schema": "repro-bench-v999"})
+    (tmp_path / "bad.jsonl").write_text('{"schema": "nope"}\n')
+    with pytest.raises(ValueError, match="bad.jsonl:1"):
+        load_history(str(tmp_path / "bad.jsonl"))
+
+
+def test_regress_cli_exit_codes(tmp_path):
+    """`python -m repro.obs.regress` is the CI gate: zero on the seeding
+    run, non-zero once a metric degrades past tolerance. Pure stdlib -
+    it must work even when the bench harness itself is broken."""
+    repo = str(tmp_path)  # run from tmp; point PYTHONPATH at the repo src
+    src = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                       os.pardir, "src")
+    hist = str(tmp_path / "BENCH_history.jsonl")
+    cur = tmp_path / "current.json"
+
+    env = dict(os.environ, PYTHONPATH=src)
+    cur.write_text(json.dumps(_payload({"decode": 100.0})))
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.obs.regress", "--history", hist,
+         "--current", str(cur), "--append"],
+        capture_output=True, text=True, cwd=repo, env=env)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "no regressions" in r.stdout
+
+    cur.write_text(json.dumps(_payload({"decode": 1000.0})))
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.obs.regress", "--history", hist,
+         "--current", str(cur)],
+        capture_output=True, text=True, cwd=repo, env=env)
+    assert r.returncode == 1
+    assert "REGRESSION kernels:decode" in r.stdout
+
+
+@pytest.mark.slow
+def test_benchmarks_run_check_regression_exit_codes(tmp_path):
+    """End-to-end through `benchmarks.run --check-regression`: the
+    seeding run exits zero and appends itself; a history doctored to
+    claim the suite used to be 100x faster makes the same run exit
+    non-zero."""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    src = os.path.join(repo, "src")
+    hist = tmp_path / "BENCH_history.jsonl"
+    out = tmp_path / "bench.json"
+    base = [sys.executable, "-m", "benchmarks.run", "--only", "table3",
+            "--json", str(out), "--history", str(hist),
+            "--check-regression"]
+    env = dict(os.environ, PYTHONPATH=src)
+
+    r = subprocess.run(base, capture_output=True, text=True, cwd=repo,
+                       env=env)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "appended run" in r.stdout
+    entries = load_history(str(hist))
+    assert len(entries) == 1 and entries[0]["metrics"]
+
+    # doctor the history: pretend every metric used to be 100x faster
+    doctored = entries[0]
+    doctored["metrics"] = {k: v / 100.0
+                           for k, v in doctored["metrics"].items()}
+    hist.write_text(json.dumps(doctored, sort_keys=True) + "\n")
+    r = subprocess.run(base, capture_output=True, text=True, cwd=repo,
+                       env=env)
+    assert r.returncode == 1, r.stdout + r.stderr
+    assert "REGRESSION" in r.stdout
+    # the bad run still lands in the trajectory (history records reality)
+    assert len(load_history(str(hist))) == 2
